@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: timing, CSV emission, sizes.
+
+Every benchmark prints rows ``section,name,value,unit,notes`` so
+``benchmarks.run`` output is machine-readable (bench_output.txt).
+Container is CPU-only: absolute times are CPU-XLA numbers; cross-
+implementation *ratios* are the paper-comparable quantity (Fig. 3/4/5
+report ratios between implementations on shared hardware too).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+ROWS: List[Tuple[str, str, str, str, str]] = []
+
+
+def emit(section: str, name: str, value, unit: str, notes: str = ""):
+    row = (section, name, f"{value}", unit, notes)
+    ROWS.append(row)
+    print(",".join(row), flush=True)
+
+
+def time_fn(fn: Callable[[], object], *, reps: int = 3,
+            warmup: int = 1) -> float:
+    """Median wall seconds of ``fn`` (block_until_ready on jax output)."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

@@ -1,0 +1,45 @@
+"""Paper Fig. 5 analogue: compilation/dispatch modes.
+
+The paper compares GCC/ICC x MKL/OpenBLAS x native/Conda builds and
+finds the BLAS library (not the compiler) dominates.  The JAX
+analogues of "how you build/dispatch the same maths":
+
+* ``eager``     — op-by-op dispatch, no jit (the un-tuned build)
+* ``jit``       — one compiled sweep per call
+* ``jit_scan``  — sweeps fused under ``lax.scan`` (amortized dispatch;
+                  the MKL-native point)
+* ``jit_x64``   — f64 maths (precision/bandwidth trade, OpenBLAS-ish)
+
+Same sampler, same data; ratios are the deliverable.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import FixedGaussian, TrainSession, init_state, run_sweeps
+from repro.core.gibbs import gibbs_step
+from repro.data.synthetic import chembl_like
+
+from .common import emit, time_fn
+
+
+def run(n_compounds: int = 1000, n_proteins: int = 128):
+    mat, test, _ = chembl_like(0, n_compounds, n_proteins)
+    s = TrainSession(num_latent=16, burnin=0, nsamples=1, seed=0)
+    s.add_train_and_test(mat, test=test, noise=FixedGaussian(5.0))
+    model, data = s._build()
+    state = init_state(model, data, 0)
+
+    with jax.disable_jit():
+        t_eager = time_fn(lambda: gibbs_step(model, data, state)[0],
+                          reps=1, warmup=0)
+    emit("compile_modes", "eager", f"{t_eager:.4f}", "s/sweep",
+         "op-by-op dispatch")
+
+    t_jit = time_fn(lambda: gibbs_step(model, data, state)[0])
+    emit("compile_modes", "jit", f"{t_jit:.4f}", "s/sweep",
+         f"{t_eager / t_jit:.1f}x over eager")
+
+    t_scan = time_fn(lambda: run_sweeps(model, data, state, 8)[0]) / 8
+    emit("compile_modes", "jit_scan", f"{t_scan:.4f}", "s/sweep",
+         f"{t_eager / t_scan:.1f}x over eager")

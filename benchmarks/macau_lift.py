@@ -1,0 +1,56 @@
+"""Paper §4 Macau: side information improves the factorization.
+
+The paper's Macau run (1M compounds x thousands of proteins, ECFP
+side info) showed side information lifts predictive quality —
+especially for sparsely-observed compounds (cold start).  Offline
+analogue: ChEMBL-like planted data where fingerprints F are noisy
+projections of the true compound factors; compare test RMSE of
+
+* BMF  (no side info)
+* Macau (F on the compound axis, link matrix beta sampled)
+
+overall and on the cold-start subset (rows with <= 2 train ratings).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import AdaptiveGaussian, TrainSession
+
+from .common import emit
+
+
+def run(n_compounds: int = 1500, n_proteins: int = 120,
+        burnin: int = 120, nsamples: int = 120):
+    from repro.data.synthetic import chembl_like
+    mat, test, F = chembl_like(3, n_compounds, n_proteins,
+                               density=0.04, rank=8, noise=0.2,
+                               n_features=64, feature_noise=0.25)
+    ti, tj, tv = test
+
+    # cold-start rows: few observed train entries
+    counts = np.bincount(np.asarray(mat.coo_i), minlength=n_compounds)
+    cold = counts[ti] <= 2
+
+    def fit(side):
+        s = TrainSession(num_latent=8, burnin=burnin,
+                         nsamples=nsamples, seed=0)
+        s.add_train_and_test(mat, test=test, noise=AdaptiveGaussian())
+        if side is not None:
+            s.add_side_info(0, side)
+        r = s.run()
+        err = r.predictions - tv
+        rmse_cold = float(np.sqrt(np.mean(err[cold] ** 2))) \
+            if cold.any() else float("nan")
+        return r, rmse_cold
+
+    r_bmf, cold_bmf = fit(None)
+    r_mac, cold_mac = fit(F)
+    emit("macau", "bmf_rmse_test", f"{r_bmf.rmse_test:.4f}", "rmse",
+         f"cold-start rmse {cold_bmf:.4f} (n={int(cold.sum())})")
+    emit("macau", "macau_rmse_test", f"{r_mac.rmse_test:.4f}", "rmse",
+         f"cold-start rmse {cold_mac:.4f}")
+    emit("macau", "cold_start_lift",
+         f"{(cold_bmf - cold_mac) / max(cold_bmf, 1e-9) * 100:.1f}",
+         "%", "side-info RMSE reduction on cold rows")
+    return r_bmf, r_mac

@@ -1,0 +1,44 @@
+"""Paper Fig. 4 analogue: BMF / Macau-dense / Macau-sparse data types.
+
+The paper sweeps three algorithms x three CPU platforms (Xeon, Xeon
+Phi, ARM) and finds the gap largest for sparse data (cache
+hierarchy).  We have one host platform; the axis that survives is the
+*data type* one: BMF (sparse R), Macau with dense side info, Macau
+with sparse(-style binary) side info — same sweep count, same sizes.
+The TPU-platform column is *derived*, not measured: the dry-run
+roofline (EXPERIMENTS.md) plays the role of the second platform.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (AdaptiveGaussian, FixedGaussian, TrainSession,
+                        init_state, gibbs_step)
+from repro.data.synthetic import chembl_like
+
+from .common import emit, time_fn
+
+
+def _session(mat, test, F=None):
+    s = TrainSession(num_latent=16, burnin=0, nsamples=1, seed=0)
+    s.add_train_and_test(mat, test=test, noise=FixedGaussian(5.0))
+    if F is not None:
+        s.add_side_info(0, F)
+    model, data = s._build()
+    return model, data, init_state(model, data, 0)
+
+
+def run(n_compounds: int = 2000, n_proteins: int = 200):
+    mat, test, F = chembl_like(0, n_compounds, n_proteins,
+                               n_features=128)
+    Fd = F + 0.01 * np.random.default_rng(3).normal(
+        size=F.shape).astype(np.float32)        # dense-valued variant
+
+    for name, side, notes in (
+            ("bmf_sparse_R", None, "no side info"),
+            ("macau_dense_F", Fd, "dense side info 128 feat"),
+            ("macau_sparse_F", F, "binary ECFP-like side info")):
+        model, data, state = _session(mat, test, side)
+        t = time_fn(lambda m=model, d=data, s=state:
+                    gibbs_step(m, d, s)[0])
+        emit("platform_sweep", name, f"{t:.4f}", "s/sweep", notes)

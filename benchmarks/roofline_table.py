@@ -1,0 +1,80 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the
+dry-run records in ``results/dryrun/*.json``.
+
+One row per (arch x shape x mesh x variant): the three roofline terms,
+the dominant one, useful-FLOP ratio and roofline fraction — all
+derived from the compiled artifact, never measured (CPU container).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+COLS = ("arch", "shape", "mesh", "variant", "compute_s", "memory_s",
+        "collective_s", "dominant", "useful_flop_ratio",
+        "roofline_fraction")
+
+
+def load(variant: str | None = None) -> List[Dict]:
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if variant is not None and r.get("variant", "baseline") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def _fmt(r: Dict, col: str) -> str:
+    v = r.get(col, "")
+    if isinstance(v, float):
+        return f"{v:.3e}" if (v and abs(v) < 1e-2) else f"{v:.3f}"
+    return str(v)
+
+
+def markdown(recs: List[Dict]) -> str:
+    ok = [r for r in recs if "compute_s" in r]
+    skip = [r for r in recs if "skipped" in r]
+    fail = [r for r in recs if "error" in r]
+    lines = ["| " + " | ".join(COLS) + " |",
+             "|" + "---|" * len(COLS)]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                       r.get("variant", ""))):
+        lines.append("| " + " | ".join(_fmt(r, c) for c in COLS) + " |")
+    for r in skip:
+        lines.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','')} "
+                     f"| — | skipped: {r['skipped']} |" + " |" * 4)
+    for r in fail:
+        lines.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','')} "
+                     f"| — | ERROR {r['error'][:60]} |" + " |" * 4)
+    return "\n".join(lines)
+
+
+def run():
+    from .common import emit
+    recs = load()
+    ok = [r for r in recs if "compute_s" in r]
+    if not ok:
+        emit("roofline", "records", "0", "cells",
+             "run launch/dryrun.py first")
+        return
+    by_dom: Dict[str, int] = {}
+    for r in ok:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    emit("roofline", "cells_compiled", str(len(ok)), "cells",
+         f"dominant terms: {by_dom}")
+    worst = min(ok, key=lambda r: r.get("roofline_fraction", 1.0))
+    emit("roofline", "worst_fraction",
+         f"{worst['roofline_fraction']:.4f}", "frac",
+         f"{worst['arch']}/{worst['shape']}/{worst['mesh']}")
+    best = max(ok, key=lambda r: r.get("roofline_fraction", 0.0))
+    emit("roofline", "best_fraction",
+         f"{best['roofline_fraction']:.4f}", "frac",
+         f"{best['arch']}/{best['shape']}/{best['mesh']}")
+
+
+if __name__ == "__main__":
+    print(markdown(load()))

@@ -1,0 +1,49 @@
+"""Group Factor Analysis over multiple data views (paper §4 GFA).
+
+Three views share a sample axis; some latent factors are common to
+all views, some are view-specific.  GFA (Normal prior on the shared
+factor, spike-and-slab on the loadings) recovers which factor drives
+which view.
+
+    PYTHONPATH=src python examples/gfa_multiblock.py
+"""
+import numpy as np
+
+from repro.core import GFASession
+
+
+def main():
+    rng = np.random.default_rng(0)
+    N = 200
+    dims = (50, 40, 30)
+    # 2 shared factors + 1 specific factor per view
+    K_true = 2 + len(dims)
+    Z = rng.normal(size=(N, K_true)).astype(np.float32)
+    views, active = [], []
+    for m, D in enumerate(dims):
+        cols = [0, 1, 2 + m]
+        W = np.zeros((D, K_true), np.float32)
+        W[:, cols] = rng.normal(size=(D, len(cols)))
+        views.append((Z @ W.T + 0.1 * rng.normal(size=(N, D)))
+                     .astype(np.float32))
+        active.append(cols)
+
+    sess = GFASession(views, num_latent=K_true + 2, burnin=150,
+                      nsamples=150, seed=0)
+    out = sess.run()
+
+    print(f"GFA over {len(views)} views, {out['runtime_s']:.1f}s")
+    for m in range(len(views)):
+        print(f"  view{m}: final train RMSE "
+              f"{out['rmse_train'][m][-1]:.4f} (noise floor 0.1), "
+              f"planted active factors {active[m]}")
+    print("\nrecovered |W_m| column norms (rows=views, cols=latent):")
+    norms = np.stack([np.linalg.norm(W, axis=0) for W in out["W"]])
+    with np.printoptions(precision=1, suppress=True):
+        print(norms)
+    print("\nzero-ish columns mark factors a view does not use; "
+          "shared factors are active in every row.")
+
+
+if __name__ == "__main__":
+    main()

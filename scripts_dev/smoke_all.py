@@ -1,0 +1,53 @@
+"""Dev script: forward+loss+grad+serve for every smoke config."""
+import sys
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_smoke, get_config
+from repro.models import (forward, init_model, init_serve_cache, loss_fn,
+                          param_count, serve_step)
+from repro.models.transformer import encode
+
+only = sys.argv[1:] or ARCHS
+for arch in only:
+    cfg = get_smoke(arch)
+    full = get_config(arch)
+    tot, act = param_count(full)
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    B, S = 2, 64
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+    }
+    if cfg.n_frontend_tokens:
+        batch["frontend"] = jnp.asarray(rng.normal(
+            size=(B, cfg.n_frontend_tokens, cfg.d_model)).astype(np.float32))
+    if cfg.is_encoder_decoder:
+        batch["enc_frames"] = jnp.asarray(rng.normal(
+            size=(B, cfg.encoder_frames, cfg.d_model)).astype(np.float32))
+
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch)[0])(params)
+    gn = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn), "non-finite grads"
+    # forward only for shapes
+    logits, aux = forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size), logits.shape
+    assert not bool(jnp.isnan(logits).any()), "NaN logits"
+
+    # serve one step
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch["enc_frames"])
+    caches = init_serve_cache(params, cfg, B, 128, enc_out=enc_out,
+                              prefilled=5)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)))
+    lg, caches2 = serve_step(params, cfg, caches, tok)
+    assert lg.shape == (B, 1, cfg.vocab_size), lg.shape
+    assert not bool(jnp.isnan(lg).any()), "NaN decode logits"
+    print(f"{arch:24s} OK  loss={float(loss):.3f}  "
+          f"full={tot/1e9:.1f}B params (active {act/1e9:.1f}B)")
+print("ALL OK")

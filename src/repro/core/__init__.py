@@ -1,0 +1,33 @@
+"""SMURFF-JAX core: composable Bayesian Matrix Factorization.
+
+Public API (mirrors the smurff Python package where sensible):
+
+    TrainSession, GFASession, smurff          — session layer
+    NormalPrior, MacauPrior, SpikeAndSlabPrior — priors
+    FixedGaussian, AdaptiveGaussian, ProbitNoise — noise models
+    SparseMatrix, from_coo, from_dense, dense_block — inputs
+    ModelDef / MFData / MFState / gibbs_step  — low-level engine
+"""
+from .blocks import (BlockDef, DenseBlock, EntityDef, ModelDef,
+                     dense_block)
+from .gibbs import MFData, MFState, gibbs_step, init_state, run_sweeps
+from .noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
+from .predict import (PredictAccumulator, TestSet, auc, make_test_set,
+                      predict_one, rmse)
+from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
+                     SpikeAndSlabPrior)
+from .session import GFASession, SessionResult, TrainSession, smurff
+from .sparse import (PaddedRows, SparseMatrix, from_coo, from_dense,
+                     gather_predict, random_sparse)
+
+__all__ = [
+    "BlockDef", "DenseBlock", "EntityDef", "ModelDef", "dense_block",
+    "MFData", "MFState", "gibbs_step", "init_state", "run_sweeps",
+    "AdaptiveGaussian", "FixedGaussian", "ProbitNoise",
+    "PredictAccumulator", "TestSet", "auc", "make_test_set",
+    "predict_one", "rmse",
+    "FixedNormalPrior", "MacauPrior", "NormalPrior", "SpikeAndSlabPrior",
+    "GFASession", "SessionResult", "TrainSession", "smurff",
+    "PaddedRows", "SparseMatrix", "from_coo", "from_dense",
+    "gather_predict", "random_sparse",
+]

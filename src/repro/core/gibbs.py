@@ -1,0 +1,381 @@
+"""The Gibbs sweep (paper Algorithm 1) as pure, jit-able JAX.
+
+One ``gibbs_step`` performs, per entity in order:
+
+  1. resample the entity's prior hyper-parameters from its current
+     factor matrix ("sample hyper-parameters ... based on U/V"),
+  2. resample the whole factor matrix from its conditional
+     ("for all movies/users: update model") — one *batched* pass:
+     masked Gram + rhs (Pallas kernel or jnp oracle), batched Cholesky,
+     batched triangular solves, one fused N(0,1) draw,
+
+then resamples every block's noise state from the residuals and reports
+train-RMSE metrics.
+
+The CPU original loops rows with OpenMP; here the full half-sweep is a
+handful of large dense ops, which is what the TPU (and the distributed
+layer in ``distributed.py``) wants.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.lax.linalg import cholesky, triangular_solve
+
+from ..kernels import ops
+from .blocks import DenseBlock, ModelDef
+from .noise import ProbitNoise
+from .priors import MacauPrior, SpikeAndSlabPrior, chol_solve
+from .sparse import SparseMatrix
+
+
+class MFState(NamedTuple):
+    """Full sampler state — everything needed to restart the chain."""
+
+    key: jax.Array                      # PRNG key (counter-based)
+    factors: Tuple[jnp.ndarray, ...]    # per entity (N_e, K)
+    hypers: Tuple[Any, ...]             # per entity prior hyper pytree
+    noises: Tuple[Any, ...]             # per block noise state pytree
+    step: jnp.ndarray                   # int32 sweep counter
+
+
+class MFData(NamedTuple):
+    """Observed data — static across the chain."""
+
+    blocks: Tuple[Any, ...]             # SparseMatrix | DenseBlock
+    sides: Tuple[Optional[jnp.ndarray], ...]   # per entity side info
+
+
+def init_state(model: ModelDef, data: MFData, seed: int = 0,
+               init_scale: float = 1.0) -> MFState:
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(model.entities) + 1)
+    factors = []
+    hypers = []
+    for e, ent in enumerate(model.entities):
+        factors.append(init_scale * jax.random.normal(
+            keys[e], (ent.n_rows, model.num_latent), jnp.float32))
+        hypers.append(ent.prior.init(keys[e], ent.n_rows))
+    noises = tuple(b.noise.init() for b in model.blocks)
+    return MFState(keys[-1], tuple(factors), tuple(hypers), noises,
+                   jnp.asarray(0, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# per-block contributions to an entity's conditional
+# ---------------------------------------------------------------------------
+
+def _sparse_contrib(model: ModelDef, mat: SparseMatrix, as_row: bool,
+                    fixed: jnp.ndarray, u_cur: jnp.ndarray,
+                    noise, nstate, key):
+    """alpha-weighted (gram, rhs) of one sparse block for one entity."""
+    padded = mat.rows if as_row else mat.cols
+    vg = fixed[padded.idx]                      # (R, T, K)
+    if isinstance(noise, ProbitNoise):
+        pred = jnp.einsum("rtk,rk->rt", vg, u_cur)
+        vals, alpha = noise.augment(key, nstate, pred, padded.val,
+                                    padded.mask)
+    else:
+        vals, alpha = noise.augment(key, nstate, None, padded.val,
+                                    padded.mask)
+    gram, rhs = ops.gram_and_rhs(vg, vals, padded.mask,
+                                 use_pallas=model.use_pallas)
+    return alpha * gram, alpha * rhs            # (R,K,K), (R,K)
+
+
+def _dense_contrib(blk: DenseBlock, as_row: bool, fixed: jnp.ndarray,
+                   u_cur: jnp.ndarray, noise, nstate, key):
+    """Contributions of a dense block.
+
+    Returns (gram_shared | None, gram_rows | None, rhs).
+    """
+    X = blk.X if as_row else blk.X.T            # (R, C)
+    m = blk.mask if as_row else blk.mask.T
+    if isinstance(noise, ProbitNoise):
+        pred = u_cur @ fixed.T
+        vals, alpha = noise.augment(key, nstate, pred, X, m)
+    else:
+        vals, alpha = noise.augment(key, nstate, None, X, m)
+    if blk.fully:
+        gram_shared = alpha * (fixed.T @ fixed)             # (K, K)
+        rhs = alpha * (vals @ fixed)                        # (R, K)
+        return gram_shared, None, rhs
+    gram_rows = alpha * jnp.einsum("rc,ck,cl->rkl", m, fixed, fixed)
+    rhs = alpha * ((vals * m) @ fixed)
+    return None, gram_rows, rhs
+
+
+# ---------------------------------------------------------------------------
+# factor conditionals
+# ---------------------------------------------------------------------------
+
+def _sample_normal_factor(key, gram_shared, gram_rows, rhs, Lam_p, b_p):
+    """u_i ~ N(Lam_i^{-1} b_i, Lam_i^{-1}) batched over rows.
+
+    gram_shared (K,K) and/or gram_rows (N,K,K); rhs (N,K); Lam_p (K,K);
+    b_p (K,) or (N,K).
+    """
+    b = rhs + b_p if b_p.ndim == 2 else rhs + b_p[None, :]
+    if gram_rows is None:
+        # one shared precision -> one Cholesky, matrix solves
+        Lam = gram_shared + Lam_p                            # (K,K)
+        L = cholesky(Lam)
+        y = triangular_solve(L, b.T, left_side=True, lower=True)
+        mean = triangular_solve(L, y, left_side=True, lower=True,
+                                transpose_a=True).T          # (N,K)
+        z = jax.random.normal(key, mean.shape, jnp.float32)
+        dz = triangular_solve(L, z.T, left_side=True, lower=True,
+                              transpose_a=True).T
+        return mean + dz
+    Lam = gram_rows + (gram_shared + Lam_p)[None, :, :] \
+        if gram_shared is not None else gram_rows + Lam_p[None, :, :]
+    L = cholesky(Lam)                                        # (N,K,K)
+    mean = chol_solve(L, b)
+    z = jax.random.normal(key, mean.shape, jnp.float32)
+    dz = triangular_solve(L, z[..., None], left_side=True, lower=True,
+                          transpose_a=True)[..., 0]
+    return mean + dz
+
+
+def _sample_sns_factor(model: ModelDef, data: MFData, key,
+                       e: int, u: jnp.ndarray, hyper,
+                       factors, noises) -> jnp.ndarray:
+    """Coordinate-wise spike-and-slab update for entity ``e``.
+
+    For each latent component k (sequentially — the conditionals are
+    coupled through the residual), vectorized over rows:
+
+        q_ik = tau_k + sum_b alpha_b sum_t m f_k^2
+        l_ik = sum_b alpha_b sum_t m (r - pred_{-k}) f_k
+        odds = rho/(1-rho) * sqrt(tau_k/q) * exp(l^2 / 2q)
+        s ~ Bern(odds/(1+odds));  u_ik = s * N(l/q, 1/q)
+    """
+    K = model.num_latent
+    touching = model.blocks_touching(e)
+
+    # gather per-block views once
+    views = []
+    gview = _gather_view(model, factors)
+    for bi, as_row in touching:
+        blk = model.blocks[bi]
+        payload = data.blocks[bi]
+        fixed = gview[blk.other(e)]
+        alpha = noises[bi]["alpha"]
+        if blk.sparse:
+            padded = payload.rows if as_row else payload.cols
+            vg = fixed[padded.idx]                     # (R,T,K)
+            pred = jnp.einsum("rtk,rk->rt", vg, u)
+            views.append(("sp", vg, padded.val, padded.mask, pred, alpha))
+        else:
+            X = payload.X if as_row else payload.X.T
+            m = payload.mask if as_row else payload.mask.T
+            pred = u @ fixed.T
+            views.append(("dn", fixed, X, m, pred, alpha))
+
+    rho, tau = hyper["rho"], hyper["tau"]
+    keys = jax.random.split(key, 2 * K)
+
+    for k in range(K):
+        q = tau[k]
+        l = jnp.zeros((u.shape[0],), jnp.float32)
+        new_preds = []
+        for kind, Fv, val, m, pred, alpha in views:
+            if kind == "sp":
+                fk = Fv[:, :, k]                        # (R,T)
+                pred_mk = pred - u[:, k][:, None] * fk
+                q = q + alpha * jnp.sum(fk * fk * m, axis=-1)
+                l = l + alpha * jnp.sum((val - pred_mk) * m * fk, axis=-1)
+                new_preds.append(pred_mk)
+            else:
+                fk = Fv[:, k]                           # (C,)
+                pred_mk = pred - jnp.outer(u[:, k], fk)
+                # masked: sum_c m_rc fk_c^2  (per row)
+                q = q + alpha * (m @ (fk * fk))
+                l = l + alpha * (((val - pred_mk) * m) @ fk)
+                new_preds.append(pred_mk)
+
+        mu = l / q
+        log_odds = (jnp.log(rho[k]) - jnp.log1p(-rho[k])
+                    + 0.5 * (jnp.log(tau[k]) - jnp.log(q))
+                    + 0.5 * mu * l)
+        p_incl = jax.nn.sigmoid(log_odds)
+        s = jax.random.bernoulli(keys[2 * k], p_incl).astype(jnp.float32)
+        eps = jax.random.normal(keys[2 * k + 1], mu.shape, jnp.float32)
+        u_k = s * (mu + eps / jnp.sqrt(q))
+        u = u.at[:, k].set(u_k)
+
+        # restore preds with the new component folded back in
+        views = [
+            (kind, Fv, val, m,
+             (pred_mk + (u_k[:, None] * Fv[:, :, k] if kind == "sp"
+                         else jnp.outer(u_k, Fv[:, k]))), alpha)
+            for (kind, Fv, val, m, _, alpha), pred_mk in
+            zip(views, new_preds)
+        ]
+    return u
+
+
+# ---------------------------------------------------------------------------
+# the full sweep
+# ---------------------------------------------------------------------------
+
+def _gather_view(model: ModelDef, factors):
+    """The factor views used as gather/contraction operands.
+
+    With ``bf16_gather`` every consumer (half-sweep gathers, SDDMM
+    metrics) shares ONE bf16 copy, so the sharded all-gather moves
+    half the bytes and is CSE'd across uses — casting inside each
+    consumer instead makes XLA materialize both precisions (measured:
+    2x the collective bytes, not 0.5x).
+    """
+    if not model.bf16_gather:
+        return factors
+
+    mesh = jax.sharding.get_abstract_mesh()
+    axes = () if mesh is None else tuple(
+        a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def cast(f):
+        if not axes or f.shape[0] % n != 0:
+            return f.astype(jnp.bfloat16)
+        # EXPLICIT bf16 all-gather.  Leaving this to the partitioner
+        # does not work: XLA's algebraic simplifier sinks the bf16
+        # convert past any volume-reducing gather, so the implicit
+        # all-gather moves f32 again (measured: 2x wire bytes).  An
+        # explicit collective on the bf16 shard cannot be rewritten.
+        def body(x):
+            return jax.lax.all_gather(x.astype(jnp.bfloat16), axes,
+                                      axis=0, tiled=True)
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=jax.sharding.PartitionSpec(axes),
+            out_specs=jax.sharding.PartitionSpec(),
+            check_vma=False)(f)
+
+    return tuple(cast(f) for f in factors)
+
+
+def _entity_update(model: ModelDef, data: MFData, key, e: int,
+                   factors, hypers, noises):
+    """Hyper-sample + factor-sample for one entity; returns updates."""
+    ent = model.entities[e]
+    prior = ent.prior
+    side = data.sides[e]
+    k_hyp, k_fac, k_blk = jax.random.split(key, 3)
+    u = factors[e]
+
+    # 1. hyper-parameters from the current factor (Algorithm 1 line 2/5)
+    if isinstance(prior, MacauPrior):
+        hyper = prior.sample_hyper(k_hyp, u, hypers[e], side=side)
+    else:
+        hyper = prior.sample_hyper(k_hyp, u, hypers[e])
+
+    # 2. factor matrix from its conditional
+    if isinstance(prior, SpikeAndSlabPrior):
+        u_new = _sample_sns_factor(model, data, k_fac, e, u, hyper,
+                                   factors, noises)
+        return u_new, hyper
+
+    Lam_p = prior.precision_term(hyper)
+    if isinstance(prior, MacauPrior):
+        b_p = prior.mean_term(hyper, ent.n_rows, side=side)
+    else:
+        b_p = prior.mean_term(hyper, ent.n_rows)
+
+    gram_shared = None
+    gram_rows = None
+    rhs_acc = jnp.zeros((ent.n_rows, model.num_latent), jnp.float32)
+    bkeys = jax.random.split(k_blk, max(1, len(model.blocks)))
+    gview = _gather_view(model, factors)
+    for bi, as_row in model.blocks_touching(e):
+        blk = model.blocks[bi]
+        fixed = gview[blk.other(e)]
+        if blk.sparse:
+            g, r = _sparse_contrib(model, data.blocks[bi], as_row, fixed,
+                                   u, blk.noise, noises[bi], bkeys[bi])
+            gram_rows = g if gram_rows is None else gram_rows + g
+            rhs_acc = rhs_acc + r
+        else:
+            gs, gr, r = _dense_contrib(data.blocks[bi], as_row, fixed,
+                                       u, blk.noise, noises[bi], bkeys[bi])
+            if gs is not None:
+                gram_shared = gs if gram_shared is None else gram_shared + gs
+            if gr is not None:
+                gram_rows = gr if gram_rows is None else gram_rows + gr
+            rhs_acc = rhs_acc + r
+
+    if gram_shared is None and gram_rows is None:
+        gram_shared = jnp.zeros((model.num_latent, model.num_latent),
+                                jnp.float32)
+    u_new = _sample_normal_factor(k_fac, gram_shared, gram_rows,
+                                  rhs_acc, Lam_p, b_p)
+    return u_new, hyper
+
+
+def _block_pred_observed(model: ModelDef, data: MFData, bi: int, factors):
+    """Predictions + (vals, mask) at a block's observed entries."""
+    blk = model.blocks[bi]
+    U = factors[blk.row_entity]
+    V = factors[blk.col_entity]
+    payload = data.blocks[bi]
+    if blk.sparse:
+        pred = ops.sddmm(U[payload.coo_i], V[payload.coo_j],
+                         use_pallas=model.use_pallas)
+        return pred, payload.coo_v, payload.coo_mask
+    pred = U @ V.T
+    return pred, payload.X, payload.mask
+
+
+@partial(jax.jit, static_argnums=0)
+def gibbs_step(model: ModelDef, data: MFData, state: MFState
+               ) -> Tuple[MFState, Dict[str, jnp.ndarray]]:
+    """One full Gibbs sweep over all entities + noise states."""
+    key, *ekeys = jax.random.split(state.key, len(model.entities) + 2)
+    nkey = ekeys[-1]
+    factors = list(state.factors)
+    hypers = list(state.hypers)
+    noises = list(state.noises)
+
+    for e in range(len(model.entities)):
+        u_new, hyper = _entity_update(model, data, ekeys[e], e,
+                                      tuple(factors), tuple(hypers),
+                                      tuple(noises))
+        factors[e] = u_new
+        hypers[e] = hyper
+
+    metrics = {}
+    nkeys = jax.random.split(nkey, max(1, len(model.blocks)))
+    gview = _gather_view(model, tuple(factors))
+    for bi, blk in enumerate(model.blocks):
+        pred, vals, mask = _block_pred_observed(model, data, bi, gview)
+        noises[bi] = blk.noise.sample_state(nkeys[bi], noises[bi], pred,
+                                            vals, mask)
+        se = jnp.sum(((vals - pred) * mask) ** 2)
+        metrics[f"rmse_train_{bi}"] = jnp.sqrt(se / jnp.sum(mask))
+        metrics[f"alpha_{bi}"] = noises[bi]["alpha"]
+
+    new_state = MFState(key, tuple(factors), tuple(hypers), tuple(noises),
+                        state.step + 1)
+    return new_state, metrics
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def run_sweeps(model: ModelDef, data: MFData, state: MFState, n: int):
+    """``lax.scan`` over n sweeps; returns final state + stacked metrics.
+
+    Used by benchmarks to amortize dispatch overhead; the session layer
+    uses single ``gibbs_step`` calls to collect posterior samples.
+    """
+
+    def body(st, _):
+        st, m = gibbs_step(model, data, st)
+        return st, m
+
+    return jax.lax.scan(body, state, None, length=n)

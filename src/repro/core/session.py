@@ -1,0 +1,258 @@
+"""High-level session API, mirroring SMURFF's Python ``TrainSession``.
+
+    import repro.core as smurff
+
+    session = smurff.TrainSession(num_latent=16, burnin=200,
+                                  nsamples=400, seed=0)
+    session.add_train_and_test(R_train, test=(i, j, v),
+                               noise=smurff.AdaptiveGaussian())
+    session.add_side_info(axis=0, F=features)     # -> Macau
+    result = session.run()
+    result.rmse_test, result.predictions
+
+Composable exactly like the paper's Table 1: priors x noise x input
+matrix types x side information.  ``GFASession`` builds the multi-block
+group-factor-analysis layout on top of the same engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import (BlockDef, DenseBlock, EntityDef, ModelDef,
+                     dense_block)
+from .gibbs import MFData, MFState, gibbs_step, init_state
+from .noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
+from .predict import PredictAccumulator, TestSet, make_test_set
+from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
+                     SpikeAndSlabPrior)
+from .sparse import SparseMatrix
+
+
+@dataclasses.dataclass
+class SessionResult:
+    rmse_test: Optional[float]
+    auc_test: Optional[float]
+    predictions: Optional[np.ndarray]
+    pred_var: Optional[np.ndarray]
+    rmse_train_trace: List[float]
+    rmse_test_trace: List[float]
+    nsamples: int
+    runtime_s: float
+    state: MFState
+    samples: Optional[List[Tuple[np.ndarray, ...]]] = None
+
+
+_PRIORS = {"normal": NormalPrior, "spikeandslab": SpikeAndSlabPrior}
+
+
+class TrainSession:
+    """Single-R-matrix session (BMF / Macau / probit variants)."""
+
+    def __init__(self, num_latent: int = 16, burnin: int = 100,
+                 nsamples: int = 100, seed: int = 0,
+                 priors: Sequence[str] = ("normal", "normal"),
+                 use_pallas: bool = False, verbose: int = 0,
+                 save_freq: int = 0):
+        self.num_latent = num_latent
+        self.burnin = burnin
+        self.nsamples = nsamples
+        self.seed = seed
+        self.prior_names = tuple(p.replace("-", "").replace("_", "")
+                                 for p in priors)
+        self.use_pallas = use_pallas
+        self.verbose = verbose
+        self.save_freq = save_freq
+        self._train: Optional[Any] = None
+        self._test: Optional[TestSet] = None
+        self._noise: Any = FixedGaussian(5.0)
+        self._sides: List[Optional[np.ndarray]] = [None, None]
+        self._beta_precision = 5.0
+        self._sample_beta_precision = True
+
+    # -- construction ------------------------------------------------------
+
+    def add_train_and_test(self, train, test=None, noise=None):
+        """train: SparseMatrix | dense np.ndarray; test: (i, j, v)."""
+        if isinstance(train, np.ndarray):
+            train = dense_block(train)
+        self._train = train
+        if test is not None:
+            self._test = make_test_set(*test)
+        if noise is not None:
+            self._noise = noise
+        return self
+
+    def add_side_info(self, axis: int, F: np.ndarray,
+                      beta_precision: float = 5.0,
+                      sample_beta_precision: bool = True):
+        """Attach side information to rows (axis=0) or cols (axis=1)."""
+        self._sides[axis] = np.asarray(F, np.float32)
+        self._beta_precision = beta_precision
+        self._sample_beta_precision = sample_beta_precision
+        return self
+
+    # -- model assembly ----------------------------------------------------
+
+    def _build(self) -> Tuple[ModelDef, MFData]:
+        assert self._train is not None, "call add_train_and_test first"
+        n_rows, n_cols = self._train.shape
+        ents = []
+        for axis, (name, n) in enumerate((("rows", n_rows),
+                                          ("cols", n_cols))):
+            side = self._sides[axis]
+            if side is not None:
+                prior = MacauPrior(
+                    self.num_latent, side.shape[1],
+                    beta_precision=self._beta_precision,
+                    sample_beta_precision=self._sample_beta_precision)
+            else:
+                prior = _PRIORS[self.prior_names[axis]](self.num_latent)
+            ents.append(EntityDef(name, n, prior))
+        sparse = isinstance(self._train, SparseMatrix)
+        model = ModelDef(tuple(ents),
+                         (BlockDef(0, 1, self._noise, sparse),),
+                         self.num_latent, self.use_pallas)
+        sides = tuple(None if s is None else jnp.asarray(s)
+                      for s in self._sides)
+        data = MFData((self._train,), sides)
+        return model, data
+
+    # -- run ---------------------------------------------------------------
+
+    def run(self, keep_samples: bool = False) -> SessionResult:
+        model, data = self._build()
+        state = init_state(model, data, self.seed)
+        acc = PredictAccumulator(self._test) if self._test else None
+        t0 = time.perf_counter()
+        train_trace, test_trace = [], []
+        samples: List[Tuple[np.ndarray, ...]] = []
+
+        total = self.burnin + self.nsamples
+        for sweep in range(total):
+            state, metrics = gibbs_step(model, data, state)
+            train_trace.append(float(metrics["rmse_train_0"]))
+            if sweep >= self.burnin:
+                if acc is not None:
+                    acc.update(state.factors[0], state.factors[1])
+                    test_trace.append(
+                        float(jnp.sqrt(jnp.mean(
+                            (acc.mean - acc.test.v) ** 2))))
+                if keep_samples:
+                    samples.append(tuple(np.asarray(f)
+                                         for f in state.factors))
+            if self.verbose and (sweep % max(1, total // 20) == 0):
+                ph = "burnin" if sweep < self.burnin else "sample"
+                print(f"[{ph} {sweep:4d}] rmse_train="
+                      f"{train_trace[-1]:.4f}")
+
+        runtime = time.perf_counter() - t0
+        is_probit = isinstance(self._noise, ProbitNoise)
+        return SessionResult(
+            rmse_test=(acc.rmse() if acc else None),
+            auc_test=(acc.auc() if (acc and is_probit) else None),
+            predictions=(np.asarray(acc.mean) if acc else None),
+            pred_var=(np.asarray(acc.var) if acc else None),
+            rmse_train_trace=train_trace,
+            rmse_test_trace=test_trace,
+            nsamples=self.nsamples,
+            runtime_s=runtime,
+            state=state,
+            samples=samples if keep_samples else None,
+        )
+
+
+class GFASession:
+    """Group Factor Analysis: M views sharing a sample entity.
+
+    views: list of (N, D_m) dense arrays.  The shared entity gets a
+    Normal prior; each view's loading matrix gets the spike-and-slab
+    prior (paper Table 1, GFA row: "Normal + SnS").
+    """
+
+    def __init__(self, views: Sequence[np.ndarray], num_latent: int = 8,
+                 burnin: int = 200, nsamples: int = 200, seed: int = 0,
+                 noise: Any = None, use_pallas: bool = False,
+                 zero_init_loadings: bool = True):
+        self.views = [np.asarray(v, np.float32) for v in views]
+        self.num_latent = num_latent
+        self.burnin = burnin
+        self.nsamples = nsamples
+        self.seed = seed
+        self.noise = noise or AdaptiveGaussian()
+        self.use_pallas = use_pallas
+        # Grow-from-empty: starting the loading matrices at zero lets
+        # spike-and-slab components switch on one by one, which finds
+        # the sparse mode that a random-init Gibbs chain cannot rotate
+        # into (the GFA rotation degeneracy; R's CCAGFA needs an
+        # explicit rotation-optimization step for the same reason).
+        self.zero_init_loadings = zero_init_loadings
+
+    def _build(self) -> Tuple[ModelDef, MFData]:
+        N = self.views[0].shape[0]
+        # GFA pins Z ~ N(0, I) (fixed); SnS on the loadings does the
+        # component selection (see FixedNormalPrior docstring).
+        ents = [EntityDef("samples", N, FixedNormalPrior(self.num_latent))]
+        blocks = []
+        payloads = []
+        for m, X in enumerate(self.views):
+            assert X.shape[0] == N, "views must share the sample axis"
+            ents.append(EntityDef(f"view{m}", X.shape[1],
+                                  SpikeAndSlabPrior(self.num_latent)))
+            blocks.append(BlockDef(0, m + 1, self.noise, sparse=False))
+            payloads.append(dense_block(X))
+        model = ModelDef(tuple(ents), tuple(blocks), self.num_latent,
+                         self.use_pallas)
+        data = MFData(tuple(payloads), tuple([None] * len(ents)))
+        return model, data
+
+    def run(self) -> Dict[str, Any]:
+        model, data = self._build()
+        state = init_state(model, data, self.seed)
+        if self.zero_init_loadings:
+            fs = list(state.factors)
+            for e in range(1, len(fs)):
+                fs[e] = jnp.zeros_like(fs[e])
+            state = state._replace(factors=tuple(fs))
+        t0 = time.perf_counter()
+        train_traces: List[List[float]] = [[] for _ in self.views]
+        # posterior means of Z and the W_m
+        sums = [jnp.zeros((e.n_rows, self.num_latent))
+                for e in model.entities]
+        n_acc = 0
+        for sweep in range(self.burnin + self.nsamples):
+            state, metrics = gibbs_step(model, data, state)
+            for m in range(len(self.views)):
+                train_traces[m].append(float(metrics[f"rmse_train_{m}"]))
+            if sweep >= self.burnin:
+                sums = [s + f for s, f in zip(sums, state.factors)]
+                n_acc += 1
+        means = [np.asarray(s / max(n_acc, 1)) for s in sums]
+        return {
+            "Z": means[0],
+            "W": means[1:],
+            "Z_last": np.asarray(state.factors[0]),
+            "W_last": [np.asarray(f) for f in state.factors[1:]],
+            "rmse_train": train_traces,
+            "runtime_s": time.perf_counter() - t0,
+            "state": state,
+        }
+
+
+def smurff(train, test=None, side_info=(None, None), num_latent=16,
+           burnin=100, nsamples=100, noise=None, seed=0,
+           use_pallas=False, verbose=0) -> SessionResult:
+    """One-call convenience API (mirrors ``smurff.smurff(...)``)."""
+    sess = TrainSession(num_latent=num_latent, burnin=burnin,
+                        nsamples=nsamples, seed=seed,
+                        use_pallas=use_pallas, verbose=verbose)
+    sess.add_train_and_test(train, test=test, noise=noise)
+    for axis, F in enumerate(side_info):
+        if F is not None:
+            sess.add_side_info(axis, F)
+    return sess.run()

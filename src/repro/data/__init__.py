@@ -1,0 +1,4 @@
+from .synthetic import (chembl_like, lm_batches, make_lm_batch,
+                        TokenStream)
+
+__all__ = ["chembl_like", "lm_batches", "make_lm_batch", "TokenStream"]

@@ -1,0 +1,144 @@
+"""Flash-attention forward Pallas-TPU kernel.
+
+The LM-side compute hot-spot (and, after the §Perf iterations, the
+dominant residual HBM traffic) is attention's (Sq x Sk) score matrix.
+``models/layers.flash_attention`` removes the *stacked* score
+residuals at the XLA level, but XLA still round-trips each chunk's
+scores through HBM (two dots cannot fuse).  This kernel is the
+TPU-native step: the score tile lives only in VMEM; HBM sees exactly
+q, k, v and out — the flash-attention traffic contract.
+
+Layout: GQA folded as (B*KVH, G*Sq, hd) rows against (B*KVH, Sk, hd)
+keys/values, so one kernel shape serves MHA and GQA.  Grid =
+(batch-head, q-block, k-block), k minor; online-softmax accumulators
+(m, l, acc) persist in VMEM scratch across the k sweep (revisiting
+grid pattern, same discipline as kernels/gram.py).
+
+Causal masking works on *positions*: qpos = q_offset + (row mod Sq)
+(the fold puts G query groups over the same positions), kpos = global
+k index; optional sliding window.  Fully-masked k-blocks are skipped
+via ``pl.when`` on the block indices.
+
+Validated against ``models/layers._flash_fwd`` / ``ref.py`` maths in
+``tests/test_flash.py`` (interpret mode; shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  sq: int, block_q: int, block_k: int, n_kb: int,
+                  causal: bool, window: int, q_offset: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # positions: query rows are (g, s) folded -> position = row % sq
+    rows = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    qpos = q_offset + rows % sq
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)          # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)          # (BK, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (BQ, BK)
+        if causal:
+            m_ok = kpos <= qpos
+            if window > 0:
+                m_ok &= kpos > qpos - window
+            s = jnp.where(m_ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (BQ,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])            # (BQ, BK)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)     # (BQ, hd)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_cur
+
+    if causal:
+        # skip k-blocks fully in the future of every query in the tile
+        first_q = q_offset + (qi * block_q) % sq
+        pl.when(ki * block_k <= first_q + block_q - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == n_kb - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] /
+                    jnp.where(l == 0.0, 1.0, l)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset",
+                              "block_q", "block_k", "interpret"))
+def flash_fwd_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                     q_offset: int = 0, block_q: int = 128,
+                     block_k: int = 128, interpret: bool = False):
+    """q (B,Sq,H,hd), k/v (B,Sk,KVH,hd) -> out (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / np.sqrt(hd)
+
+    # fold GQA: (B*KVH, G*Sq, hd) queries vs (B*KVH, Sk, hd) keys
+    qf = (q.reshape(B, Sq, KVH, G, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(B * KVH, G * Sq, hd))
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KVH, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KVH, Sk, hd)
+
+    bq = min(block_q, G * Sq)
+    while (G * Sq) % bq or Sq % min(bq, Sq):
+        bq //= 2
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk //= 2
+    grid = (B * KVH, (G * Sq) // bq, Sk // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, sq=Sq, block_q=bq, block_k=bk,
+                          n_kb=grid[2], causal=causal, window=window,
+                          q_offset=q_offset, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G * Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),        # running max
+            pltpu.VMEM((bq,), jnp.float32),        # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    return (out.reshape(B, KVH, G, Sq, hd).transpose(0, 3, 1, 2, 4)
+            .reshape(B, Sq, H, hd))

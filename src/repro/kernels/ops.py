@@ -1,0 +1,66 @@
+"""Public kernel entry points.
+
+``gram_and_rhs`` / ``sddmm`` dispatch between the Pallas kernel (TPU
+target; ``interpret=True`` on CPU) and the pure-jnp oracle, controlled
+by the ``use_pallas`` flag carried in the session config.  On this
+container (CPU-only) the default is the XLA path; tests exercise the
+Pallas path in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .gram import gram_pallas
+from .sddmm import sddmm_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def gram_and_rhs(vg: jnp.ndarray, val: jnp.ndarray, mask: jnp.ndarray,
+                 *, use_pallas: bool = False, interpret: bool | None = None):
+    """Fused masked batched Gram; see kernels/gram.py.
+
+    Pads rows/nnz up to the kernel block multiples (mask-0 padding is an
+    exact no-op) and slices the result back.
+    """
+    if not use_pallas:
+        return ref.gram_ref(vg, val, mask)
+    interpret = (not _ON_TPU) if interpret is None else interpret
+    br, bt = 8, 128
+    vg_p, R = _pad_to(vg, 0, br)
+    vg_p, _ = _pad_to(vg_p, 1, bt)
+    val_p, _ = _pad_to(val, 0, br)
+    val_p, _ = _pad_to(val_p, 1, bt)
+    mask_p, _ = _pad_to(mask, 0, br)
+    mask_p, _ = _pad_to(mask_p, 1, bt)
+    gram, rhs = gram_pallas(vg_p, val_p, mask_p, block_rows=br,
+                            block_nnz=bt, interpret=interpret)
+    return gram[:R], rhs[:R]
+
+
+def sddmm(ug: jnp.ndarray, vg: jnp.ndarray, *, use_pallas: bool = False,
+          interpret: bool | None = None) -> jnp.ndarray:
+    """Gathered-operand SDDMM; see kernels/sddmm.py."""
+    if not use_pallas:
+        return ref.sddmm_ref(ug, vg)
+    interpret = (not _ON_TPU) if interpret is None else interpret
+    be, bk = 512, 128
+    ug_p, E = _pad_to(ug, 0, be)
+    ug_p, _ = _pad_to(ug_p, 1, bk)
+    vg_p, _ = _pad_to(vg, 0, be)
+    vg_p, _ = _pad_to(vg_p, 1, bk)
+    out = sddmm_pallas(ug_p, vg_p, block_e=be, block_k=bk,
+                       interpret=interpret)
+    return out[:E]

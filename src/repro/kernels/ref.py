@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels.py`` sweeps shapes/dtypes in interpret mode) and
+the paper-faithful baseline implementation used when
+``use_pallas=False`` (the XLA path — analogous to SMURFF's plain
+Eigen/MKL GEMM path).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(vg: jnp.ndarray, val: jnp.ndarray, mask: jnp.ndarray):
+    """Masked batched Gram + rhs — the SMURFF per-row hot loop.
+
+    For each row r (paper Algorithm 1 inner loop):
+        gram[r] = sum_t mask[r,t] * vg[r,t,:] vg[r,t,:]^T     (K x K)
+        rhs[r]  = sum_t mask[r,t] * val[r,t] * vg[r,t,:]      (K,)
+
+    Args:
+      vg:   (R, T, K) gathered latent vectors of the *fixed* factor.
+      val:  (R, T) observed ratings (0 where padded).
+      mask: (R, T) 1.0 for real entries, 0.0 for padding.
+
+    Returns:
+      gram (R, K, K) f32, rhs (R, K) f32.
+    """
+    if vg.dtype == jnp.bfloat16:
+        # bf16 gathered operands (ModelDef.bf16_gather): keep every
+        # pre-contraction op in bf16 — an f32 upcast here would let
+        # XLA's simplifier fold it into the pre-gather cast and move
+        # the (all-)gather back to f32 (measured).  The MXU/dot
+        # accumulates in f32 via preferred_element_type.
+        m = mask.astype(jnp.bfloat16)
+        w = (val * mask).astype(jnp.bfloat16)
+        gram = jnp.einsum("rtk,rtl->rkl", vg * m[..., None], vg,
+                          preferred_element_type=jnp.float32)
+        rhs = jnp.einsum("rtk,rt->rk", vg, w,
+                         preferred_element_type=jnp.float32)
+        return gram, rhs
+    vg = vg.astype(jnp.float32)
+    w = (val * mask).astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    gram = jnp.einsum("rtk,rtl->rkl", vg * m[..., None], vg)
+    rhs = jnp.einsum("rtk,rt->rk", vg, w)
+    return gram, rhs
+
+
+def sddmm_ref(ug: jnp.ndarray, vg: jnp.ndarray) -> jnp.ndarray:
+    """Gathered-operand SDDMM: pred[e] = ug[e] . vg[e].
+
+    Args:
+      ug: (E, K) U rows gathered at the observed entries.
+      vg: (E, K) V rows gathered at the observed entries.
+
+    Returns:
+      (E,) f32 predictions.
+    """
+    if ug.dtype == jnp.bfloat16 and vg.dtype == jnp.bfloat16:
+        return jnp.einsum("ek,ek->e", ug, vg,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(
+        "ek,ek->e", ug.astype(jnp.float32), vg.astype(jnp.float32))

@@ -1,0 +1,63 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+This container is CPU-only, so nothing is *measured*: all three terms
+are derived from ``compiled.cost_analysis()`` (FLOPs, bytes accessed)
+plus an HLO-text parse that sums the operand bytes of every collective.
+XLA reports the cost of the *per-device* SPMD module (verified in
+``tests/test_roofline.py``: a jit over N devices reports ~1/N of the
+global matmul FLOPs), so each term divides by per-chip peaks directly:
+
+    compute_s    = flops_per_device / PEAK_FLOPS
+    memory_s     = bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+
+Collective bytes come from the trip-count-aware HLO analyzer in
+``hlo_cost.py`` (operand bytes summed per collective kind).
+
+Hardware constants (TPU v5e-like, given by the brief): 197 TFLOP/s
+bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Useful FLOPs per device: 6·N_active·D train, 2·N_active·D fwd."""
+    from ..models.config import param_count
+    total, active = param_count(cfg)
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind in ("train", "prefill") else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * active * tokens / n_chips
+
+
+def roofline_terms(rec: Dict, cfg, shape) -> Dict:
+    """The three terms (s), the bottleneck, and the useful-FLOP ratio.
+
+    The memory term uses ``bytes_hbm`` (TPU-fusion materialization
+    model + entry args/outputs — see hlo_cost._MATERIALIZE) when the
+    record carries it; ``bytes_accessed`` (every top-level op at
+    CPU-fusion granularity) is kept in the record as the upper bound.
+    """
+    comp = rec["flops"] / PEAK_FLOPS
+    mem = rec.get("bytes_hbm", rec["bytes_accessed"]) / HBM_BW
+    coll = rec["collective_bytes"]["total"] / ICI_BW
+    dom = max(("compute", comp), ("memory", mem),
+              ("collective", coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape, rec["n_chips"])
+    bound = max(comp, mem, coll)
+    return {
+        "compute_s": comp,
+        "memory_s": mem,
+        "collective_s": coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_flop_ratio": (mf / rec["flops"]) if rec["flops"] else 0.0,
+        # fraction of roofline-bound time the chip would spend at peak
+        # on *useful* math — the headline perf score
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+    }

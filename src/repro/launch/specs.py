@@ -1,0 +1,195 @@
+"""ShapeDtypeStruct stand-ins for every model input + state shardings.
+
+``input_specs(cfg, shape)`` returns exactly what the corresponding step
+function takes, as abstract values — weak-type-correct, shardable, no
+device allocation — so the dry-run can ``.lower()`` full-size cells on
+placeholder devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.shapes import ShapeSpec
+from ..models import init_model, init_serve_cache
+from ..models.config import ModelConfig
+from ..models import sharding as shd
+from ..optim import adamw_init
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract training/prefill batch for one (arch, shape) cell."""
+    B = shape.global_batch
+    S = shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        # seq drives the audio axis; decoder fixed at 448 tokens
+        from ..configs.whisper_medium import DECODER_LEN
+        out["enc_frames"] = _sds((B, S, cfg.d_model), F32)
+        out["tokens"] = _sds((B, DECODER_LEN), I32)
+        out["labels"] = _sds((B, DECODER_LEN), I32)
+        return out
+    s_text = S - cfg.n_frontend_tokens
+    out["tokens"] = _sds((B, s_text), I32)
+    out["labels"] = _sds((B, s_text), I32)
+    if cfg.n_frontend_tokens:
+        out["frontend"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                               F32)
+    return out
+
+
+def effective_variant(variant: str, shape: ShapeSpec, mesh: Mesh) -> str:
+    """Drop flags whose preconditions the cell violates.
+
+    ``dponly`` requires the global batch to divide the WHOLE mesh —
+    otherwise disabling the TP constraints just replicates compute on
+    every model rank (measured: smollm prefill_32k, B=32 on 256
+    chips: 16x the FLOPs and 85 GiB/dev).
+    """
+    flags = [f for f in variant.split(",") if f]
+    if "dponly" in flags:
+        n = 1
+        for a in mesh.axis_names:
+            n *= mesh.shape[a]
+        if shape.global_batch % n:
+            flags.remove("dponly")
+    return ",".join(flags) or "baseline"
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    variant: str = "baseline"):
+    if "dponly" in variant.split(","):
+        # treat the model axis as extra data parallelism: batch shards
+        # over every mesh axis that divides it (small-model regime
+        # where TP would replicate attention compute)
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+        bs = P(axes) if shape.global_batch % shd._axis_size(
+            mesh, axes) == 0 else shd.batch_spec(mesh, shape.global_batch)
+    else:
+        bs = shd.batch_spec(mesh, shape.global_batch)
+
+    def leaf(x):
+        spec = [bs[0] if len(bs) else None] + [None] * (len(x.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, batch_specs(cfg, shape))
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """(params, opt_state) as ShapeDtypeStructs via eval_shape."""
+
+    def init():
+        p = init_model(jax.random.PRNGKey(0), cfg)
+        return p, adamw_init(p)
+
+    return jax.eval_shape(init)
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh,
+                          variant: str = "baseline"):
+    params_abs, opt_abs = abstract_train_state(cfg)
+    if "dponly" in variant.split(","):
+        # pure data parallelism: params replicated, optimizer moments
+        # ZeRO-1-sharded over the whole mesh on the largest divisible
+        # dim.  XLA then reduce-scatters grads into the moment shards
+        # and all-gathers the updated params — no TP collectives.
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+        n = shd._axis_size(mesh, axes)
+
+        def pspec(x):
+            return NamedSharding(mesh, P())
+
+        def mspec(x):
+            for d in range(len(x.shape)):
+                if x.shape[d] % n == 0 and x.shape[d] >= n:
+                    return NamedSharding(
+                        mesh, P(*([None] * d + [axes])))
+            return NamedSharding(mesh, P())
+
+        ps = jax.tree.map(pspec, params_abs)
+        ms = jax.tree.map(mspec, params_abs)
+        return ps, type(opt_abs)(m=ms, v=ms,
+                                 step=NamedSharding(mesh, P()))
+    with shd.policy(variant):   # rules consult perf flags (e.g. "ep")
+        ps = shd.param_shardings(params_abs, mesh)
+    # m and v shard identically to the params; step replicated
+    return ps, type(opt_abs)(m=ps, v=ps,
+                             step=NamedSharding(mesh, P()))
+
+
+# ---------------------------------------------------------------------------
+# serve-side specs
+# ---------------------------------------------------------------------------
+
+def abstract_serve_cache(cfg: ModelConfig, shape: ShapeSpec):
+    """Decode caches pre-filled to seq_len-1 (the cell's KV length)."""
+    B = shape.global_batch
+    max_len = shape.seq_len
+
+    def init():
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        enc = None
+        if cfg.is_encoder_decoder:
+            enc = jnp.zeros((B, max_len, cfg.d_model), F32)
+        # whisper decoder self-cache is its 448 positions; the long
+        # axis lives in the cross K/V
+        self_len = 448 if cfg.is_encoder_decoder else max_len
+        return init_serve_cache(params, cfg, B, self_len, enc_out=enc,
+                                prefilled=self_len - 1)
+
+    return jax.eval_shape(init)
+
+
+def serve_cache_shardings(cfg: ModelConfig, shape: ShapeSpec,
+                          mesh: Mesh):
+    """Cache sharding: batch over dp, long (cache-seq) axis over model.
+
+    Works for every cache flavor in the pool:
+      attn k/v   (B, S, KVH, hd)  -> (dp, model, None, None)
+      mla c_kv   (B, S, r)        -> (dp, model, None)
+      mamba conv (B, W-1, CH)     -> (dp, None, TP)
+      mamba state(B, H, N, P)     -> (dp, TP, None, None)
+      cross k/v  (L, B, S, H, hd) -> (None, dp, model, None, None)
+    Non-dividing axes fall back to replication (fit rule).
+    """
+    caches = abstract_serve_cache(cfg, shape)
+    dp = shd.dp_axes(mesh)
+
+    def leaf(path, x):
+        ps = shd._path_str(path)
+        stacked = ("stack" in ps)
+        dims = list(x.shape)
+        spec: list = []
+        if stacked:
+            spec.append(None)
+            dims = dims[1:]
+        if not dims:
+            return NamedSharding(mesh, P())
+        if "conv" in ps:
+            cand = [dp, None, shd.TP][: len(dims)]
+        elif "state" in ps:
+            cand = [dp, shd.TP, None, None][: len(dims)]
+        else:  # k/v/c_kv/k_rope: (B, S, ...) -> batch dp, seq model
+            cand = ([dp, shd.TP] + [None] * (len(dims) - 2))[: len(dims)]
+        fitted = [c if (c and d % shd._axis_size(mesh, c) == 0) else None
+                  for d, c in zip(dims, cand)]
+        return NamedSharding(mesh, P(*(([None] if stacked else [])
+                                       + fitted)))
+
+    return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+def serve_token_spec(cfg: ModelConfig, shape: ShapeSpec):
+    return _sds((shape.global_batch, 1), I32)

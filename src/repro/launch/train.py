@@ -1,0 +1,177 @@
+"""Training step + loop: grad-accumulated, sharded, restartable.
+
+``make_train_step`` builds the jit-able (params, opt, batch) -> step
+with microbatch gradient accumulation (lax.scan) — the per-microbatch
+activation footprint is what fits in HBM; the accumulated grad lives in
+fp32 and shards like the params (ZeRO-3 posture).
+
+``train`` is the runnable driver used by examples/train_lm.py: data
+pipeline, checkpoint/auto-resume, straggler monitor, failure-restart.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..checkpoint import CheckpointManager
+from ..data import TokenStream, make_lm_batch
+from ..models import init_model, loss_fn
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from ..runtime import StragglerMonitor
+from . import specs as S
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    mesh: Optional[Mesh] = None, n_micro: int = 1,
+                    remat: bool = True):
+    """Returns ``step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    ``n_micro`` splits the global batch into scan-accumulated
+    microbatches (batch axis must divide).
+    """
+
+    def micro_loss(params, mb):
+        return loss_fn(params, cfg, mb, mesh=mesh, remat=remat)
+
+    def step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, met), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(n_micro, x.shape[0] // n_micro,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                (l, met), g = jax.value_and_grad(
+                    micro_loss, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), met
+
+            (grads, loss), met = jax.lax.scan(
+                acc, (g0, jnp.asarray(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            met = jax.tree.map(lambda x: x[-1], met)
+
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_sharded_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                            mesh: Mesh, shape, *, n_micro: int = 1,
+                            donate: bool = True,
+                            variant: str = "baseline"):
+    """jit-with-shardings version for the production mesh / dry-run.
+
+    ``variant`` selects the perf flavor recorded in §Perf:
+      baseline — remat on, scan-accumulated microbatches
+      noremat  — activation checkpointing off (memory-vs-compute trade)
+      dponly   — batch over the whole mesh (model axis included),
+                 params replicated + ZeRO-1 moments: the small-model
+                 regime where TP would replicate attention compute
+    """
+    variant = S.effective_variant(variant, shape, mesh)
+    flags = variant.split(",")
+    if "dponly" in flags:
+        n_micro = 1          # 1-seq-per-device batches need no accum
+    for f in flags:          # explicit microbatch override: "micro<k>"
+        if f.startswith("micro") and f[5:].isdigit():
+            n_micro = int(f[5:])
+    raw_step = make_train_step(cfg, opt_cfg, mesh=mesh, n_micro=n_micro,
+                               remat=(variant != "noremat"))
+
+    def step(params, opt_state, batch):
+        # the policy context is live while jit traces this body, so
+        # every shd.constrain in the model sees the variant
+        from ..models import sharding as shd
+        with shd.policy(variant):
+            return raw_step(params, opt_state, batch)
+
+    ps, os_ = S.train_state_shardings(cfg, mesh, variant=variant)
+    bsh = S.batch_shardings(cfg, shape, mesh, variant=variant)
+    return jax.jit(
+        step,
+        in_shardings=(ps, os_, bsh),
+        out_shardings=(ps, os_, NamedSharding(mesh, P())),
+        donate_argnums=(0, 1) if donate else (),
+    ), (ps, os_, bsh)
+
+
+def train(cfg: ModelConfig, *, steps: int = 100, batch: int = 8,
+          seq: int = 128, opt_cfg: Optional[AdamWConfig] = None,
+          ckpt_dir: Optional[str] = None, save_every: int = 50,
+          seed: int = 0, n_micro: int = 1, log_every: int = 10,
+          failure_sim=None) -> Dict[str, Any]:
+    """Single-host runnable training loop (examples / smoke tests)."""
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, n_micro=n_micro))
+    stream = TokenStream(cfg.vocab_size, seed=seed)
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+    mon = StragglerMonitor()
+
+    params = init_model(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw_init(params)
+    start = 0
+    if mgr is not None:
+        restored = mgr.restore_latest((params, opt_state))
+        if restored is not None:
+            start, (params, opt_state) = restored
+
+    losses = []
+    t0 = time.perf_counter()
+    i = start
+    while i < steps:
+        try:
+            if failure_sim is not None:
+                failure_sim.check(i)
+            b = make_lm_batch(
+                stream, i, batch, seq,
+                frontend_tokens=cfg.n_frontend_tokens,
+                d_model=cfg.d_model,
+                enc_frames=cfg.encoder_frames
+                if cfg.is_encoder_decoder else 0)
+            ts = time.perf_counter()
+            params, opt_state, m = step_fn(params, opt_state, b)
+            mon.record(time.perf_counter() - ts)
+            losses.append(float(m["loss"]))
+            if log_every and i % log_every == 0:
+                print(f"step {i:5d}  loss {losses[-1]:.4f}  "
+                      f"gnorm {float(m['grad_norm']):.3f}  "
+                      f"lr {float(m['lr']):.2e}")
+            i += 1
+            if mgr is not None and (i % save_every == 0 or i == steps):
+                mgr.save(i, (params, opt_state))
+        except Exception as e:  # noqa: BLE001 — restart path
+            if failure_sim is not None and \
+                    type(e).__name__ == "DeviceLost":
+                restored = mgr.restore_latest((params, opt_state)) \
+                    if mgr else None
+                if restored is None:
+                    i = 0
+                    params = init_model(jax.random.PRNGKey(seed), cfg)
+                    opt_state = adamw_init(params)
+                else:
+                    i, (params, opt_state) = restored
+                continue
+            raise
+    if mgr is not None:
+        mgr.wait()
+    return {"losses": losses, "params": params, "opt_state": opt_state,
+            "runtime_s": time.perf_counter() - t0,
+            "final_step": i}

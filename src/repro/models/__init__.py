@@ -1,0 +1,7 @@
+from .config import LayerSpec, ModelConfig, param_count
+from .transformer import (encode, forward, init_model, init_serve_cache,
+                          loss_fn, serve_step)
+
+__all__ = ["LayerSpec", "ModelConfig", "param_count", "encode",
+           "forward", "init_model", "init_serve_cache", "loss_fn",
+           "serve_step"]

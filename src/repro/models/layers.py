@@ -1,0 +1,495 @@
+"""Model building blocks: norms, RoPE, attention (GQA / MLA), MLPs, MoE.
+
+Functional style: every block is an ``init_*(key, cfg) -> params`` plus
+an ``apply`` that takes the params dict.  Params are stored fp32 and
+cast to the compute dtype inside apply (MaxText convention: fp32 master
++ bf16 compute).
+
+Attention supports three modes through one code path:
+  * train/prefill: full-sequence causal (or bidirectional/cross),
+    q-chunked online-softmax scan so peak memory is
+    O(chunk x seq) not O(seq^2) — the XLA-level analogue of flash
+    attention, compiles on any backend and keeps the dry-run memory
+    analysis honest;
+  * decode: single query position against a (possibly windowed) cache,
+    masked beyond the current length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import sharding as shd
+
+Params = Dict[str, Any]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings / rope
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x (..., S, H, hd), pos (..., S) int32 -> rotated, same dtype."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., : hd // 2].astype(jnp.float32)
+    x2 = x[..., hd // 2:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_pos(seq: int, d: int) -> jnp.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+def _dense(key, fan_in: int, *shape) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(fan_in)
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# core attention math (shared by GQA and MLA)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_softmax_out(q, k, v, mask, scale):
+    """q (B,Sq,H,hd), k/v (B,Sk,KVH,hd[v]); grouped-query einsum.
+
+    Under the ``bf16scores`` perf flag the two big materialized
+    tensors (scores, weights) stay bf16 — the MXU accumulates in f32
+    either way, and the softmax maths runs in f32 inside the fusion —
+    halving the attention HBM traffic.
+    """
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    q = q.reshape(B, Sq, KVH, G, hd)
+    if shd.flag("bf16scores"):
+        scores = jnp.einsum("bqkgh,bskh->bkgqs",
+                            q.astype(jnp.bfloat16),
+                            k.astype(jnp.bfloat16)) * scale
+        scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(jnp.bfloat16)
+    else:
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        scores = jnp.where(mask, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                      window: int = 0, q_offset: int = 0):
+    """Q-chunked attention: scan over query chunks, full KV per chunk.
+
+    Peak intermediate is (B, KVH, G, chunk, Sk) — memory-bounded for
+    long sequences, trivially remat-able, compiles on all backends.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    if Sq <= chunk:
+        mask = _attn_mask(Sq, Sk, causal, window, q_offset)
+        return _gqa_scores_softmax_out(q, k, v, mask, scale)
+    assert Sq % chunk == 0
+    n = Sq // chunk
+    qs = q.reshape(B, n, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    if shd.flag("flashvjp"):
+        # hand-written VJP: backward recomputes scores per chunk and
+        # never stacks them (see flash_attention above)
+        return flash_attention(q, k, v, causal, window, q_offset, chunk)
+
+    def chunk_out(ci, qc, kk, vv):
+        mask = _attn_mask_dyn(chunk, Sk, causal, window,
+                              q_offset + ci * chunk)
+        return _gqa_scores_softmax_out(qc, kk, vv, mask, scale)
+
+    def body(carry, args):
+        ci, qc = args
+        return carry, chunk_out(ci, qc, k, v)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n), qs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# flash attention (custom VJP, XLA-level)
+# ---------------------------------------------------------------------------
+#
+# ``chunked_attention`` under plain autodiff stacks every q-chunk's
+# (chunk x Sk) score matrix in HBM as a scan residual — O(Sq x Sk)
+# traffic and memory, exactly what chunking was meant to avoid.  The
+# hand-written VJP below is the flash-attention recipe at the XLA
+# level: forward saves only (out, rowmax m, rowsum l); backward
+# recomputes scores chunk-by-chunk and contracts them immediately into
+# dq/dk/dv, so no score tensor is ever stacked.  Enabled by the
+# ``flashvjp`` perf flag; a Pallas TPU kernel with the same contract
+# lives in kernels/flash.py for the hardware path.
+
+def _score_dtype(like):
+    """Materialized score dtype: bf16 under the flag (f32 softmax
+    maths still happens in-register after the fused upcast)."""
+    return jnp.bfloat16 if shd.flag("bf16scores") else jnp.float32
+
+
+def _flash_chunk_fwd(qc, k, v, mask, scale):
+    """One q-chunk: returns (out, m, l); shapes (B,KVH,G,C,*)."""
+    f32 = jnp.float32
+    sd = _score_dtype(qc)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qc.astype(sd), k.astype(sd),
+                   preferred_element_type=sd) * scale
+    s = jnp.where(mask, s.astype(f32), -1e30)
+    m = jnp.max(s, axis=-1)                          # (B,KVH,G,C)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v.dtype), v)
+    out = out / l[..., None].astype(v.dtype)
+    return out, m, l
+
+
+def _flash_args(q, k, v, causal, window, q_offset, chunk):
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    n = max(1, Sq // chunk)
+    qs = q.reshape(B, n, Sq // n, KVH, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    return qs, n, (B, Sq, H, hd, KVH, G)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool, window: int, q_offset: int,
+                    chunk: int):
+    """q (B,Sq,H,hd), k/v (B,Sk,KVH,*): chunked, never stacks scores."""
+    out, _, _ = _flash_fwd(q, k, v, causal, window, q_offset, chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, chunk):
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    qs, n, (B, Sq, H, hd, KVH, G) = _flash_args(
+        q, k, v, causal, window, q_offset, chunk)
+    Sk = k.shape[1]
+    C = Sq // n
+
+    def body(_, args):
+        ci, qc = args                            # qc (B,KVH,G,C,hd)
+        mask = _attn_mask_dyn(C, Sk, causal, window,
+                              q_offset + ci * C)[:, :, :, None]
+        o, m, l = _flash_chunk_fwd(qc.transpose(0, 3, 1, 2, 4)
+                                   .reshape(B, C, H, hd)
+                                   .reshape(B, C, KVH, G, hd),
+                                   k, v, mask[0], scale)
+        return None, (o, m, l)
+
+    _, (outs, ms, ls) = jax.lax.scan(body, None, (jnp.arange(n), qs))
+    # outs (n,B,KVH,G,C,hdv) -> (B,Sq,H,hdv)
+    hdv = v.shape[-1]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hdv)
+    return out, ms, ls
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_offset, chunk):
+    out, ms, ls = _flash_fwd(q, k, v, causal, window, q_offset, chunk)
+    return out, (q, k, v, out, ms, ls)
+
+
+def _flash_vjp_bwd(causal, window, q_offset, chunk, res, g):
+    q, k, v, out, ms, ls = res
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    hdv = v.shape[-1]
+    n = ms.shape[0]
+    C = Sq // n
+    f32 = jnp.float32
+
+    qs = q.reshape(B, n, C, KVH, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    gs = g.reshape(B, n, C, KVH, G, hdv).transpose(1, 0, 3, 4, 2, 5)
+    os_ = out.reshape(B, n, C, KVH, G, hdv).transpose(1, 0, 3, 4, 2, 5)
+
+    sd = _score_dtype(q)
+
+    def body(carry, args):
+        dk, dv = carry
+        ci, qc, gc, oc, m, l = args              # (B,KVH,G,C,*)
+        mask = _attn_mask_dyn(C, Sk, causal, window,
+                              q_offset + ci * C)[0, :, :, None]
+        s = jnp.einsum("bkgch,bskh->bkgcs", qc.astype(sd), k.astype(sd),
+                       preferred_element_type=sd) * scale
+        s = jnp.where(mask, s.astype(f32), -1e30)
+        p = jnp.exp(s - m[..., None]) / l[..., None]      # (B,KVH,G,C,Sk)
+        dp = jnp.einsum("bkgch,bskh->bkgcs", gc.astype(sd), v.astype(sd),
+                        preferred_element_type=sd).astype(f32)
+        D = jnp.sum(gc.astype(f32) * oc.astype(f32), axis=-1)  # (B,KVH,G,C)
+        ds = p * (dp - D[..., None]) * scale
+        dqc = jnp.einsum("bkgcs,bskh->bkgch", ds.astype(q.dtype), k)
+        dk = dk + jnp.einsum("bkgcs,bkgch->bskh", ds.astype(q.dtype), qc)
+        dv = dv + jnp.einsum("bkgcs,bkgch->bskh",
+                             p.astype(v.dtype), gc)
+        return (dk, dv), dqc
+
+    dk0 = jnp.zeros_like(k)
+    dv0 = jnp.zeros_like(v)
+    (dk, dv), dqs = jax.lax.scan(
+        body, (dk0, dv0), (jnp.arange(n), qs, gs, os_, ms, ls))
+    dq = dqs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def _attn_mask(Sq, Sk, causal, window, q_offset):
+    if not causal:
+        return jnp.ones((1, 1, 1, Sq, Sk), bool)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    m = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m[None, None, None]
+
+
+def _attn_mask_dyn(Sq, Sk, causal, window, q_offset):
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    if not causal:
+        return jnp.ones((1, 1, 1, Sq, Sk), bool)
+    m = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m[None, None, None]
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window: int = 0):
+    """Single-position decode: q (B,1,H,hd) vs cache (B,Smax,KVH,*).
+
+    Masks cache positions >= cur_len (and outside the window).
+    """
+    B, _, H, hd = q.shape
+    Smax = k_cache.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    kpos = jnp.arange(Smax)
+    valid = kpos < cur_len
+    if window > 0:
+        valid &= kpos >= jnp.maximum(cur_len - window, 0)
+    mask = valid[None, None, None, None, :]
+    return _gqa_scores_softmax_out(q, k_cache, v_cache, mask, scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    D, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": {"w": _dense(ks[0], D, D, H * hd)},
+        "wk": {"w": _dense(ks[1], D, D, KVH * hd)},
+        "wv": {"w": _dense(ks[2], D, D, KVH * hd)},
+        "wo": {"w": _dense(ks[3], H * hd, H * hd, D)},
+    }
+    if cfg.qkv_bias:
+        p["wq"]["bias"] = jnp.zeros((H * hd,), jnp.float32)
+        p["wk"]["bias"] = jnp.zeros((KVH * hd,), jnp.float32)
+        p["wv"]["bias"] = jnp.zeros((KVH * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _proj(p: Params, x, n_heads, hd, dtype):
+    w = p["w"].astype(dtype)
+    y = jnp.einsum("bsd,dh->bsh", x, w)
+    if "bias" in p:
+        y = y + p["bias"].astype(dtype)
+    return y.reshape(*x.shape[:-1], n_heads, hd)
+
+
+def apply_attention(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                    mesh=None, causal: bool = True, window: int = 0,
+                    positions: Optional[jnp.ndarray] = None,
+                    cache: Optional[Params] = None,
+                    kv_src: Optional[jnp.ndarray] = None,
+                    use_rope: bool = True
+                    ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """One attention layer.
+
+    cache: {"k","v" (B,Smax,KVH,hd), "len" ()} — decode mode when given
+    and x has seq 1 (self-attn) — or reused cross-attn K/V.
+    kv_src: encoder output for cross attention (causal=False).
+    """
+    dtype = cdtype(cfg)
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _proj(p["wq"], x, H, hd, dtype)
+    src = x if kv_src is None else kv_src.astype(dtype)
+    k = _proj(p["wk"], src, KVH, hd, dtype)
+    v = _proj(p["wv"], src, KVH, hd, dtype)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+
+    q = shd.constrain(q, mesh, shd.DP, None, shd.TP, None)
+    k = shd.constrain(k, mesh, shd.DP, None, shd.TP, None)
+    v = shd.constrain(v, mesh, shd.DP, None, shd.TP, None)
+
+    new_cache = None
+    if cache is not None and kv_src is None:
+        cur = cache["len"]
+        if use_rope:
+            pos = jnp.full((B, S), cur, jnp.int32) if positions is None \
+                else positions
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        if window > 0:
+            slot = jnp.mod(cur, cache["k"].shape[1])
+        else:
+            slot = cur
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                 k.astype(dtype), slot, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                 v.astype(dtype), slot, 1)
+        # windowed ring buffer: the cache itself is window-sized, so
+        # masking by effective length suffices (positions wrap).
+        eff_len = jnp.minimum(cur + 1, kc.shape[1]) if window > 0 \
+            else cur + 1
+        out = decode_attention(q, kc, vc, eff_len)
+        new_cache = {"k": kc, "v": vc, "len": cur + 1}
+    else:
+        if use_rope:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                   (B, S)) if positions is None \
+                else positions
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        out = chunked_attention(q, k, v, causal=causal, window=window)
+
+    out = shd.constrain(out, mesh, shd.DP, None, shd.TP, None)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd),
+                   p["wo"]["w"].astype(dtype))
+    return y, new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    window: int = 0) -> Params:
+    size = min(window, max_len) if window > 0 else max_len
+    dtype = cdtype(cfg)
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "len": jnp.asarray(0, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_gelu:
+        return {"wi": {"w": _dense(ks[0], D, D, F),
+                       "bias": jnp.zeros((F,), jnp.float32)},
+                "wdown": {"w": _dense(ks[1], F, F, D),
+                          "bias": jnp.zeros((D,), jnp.float32)}}
+    return {"wi": {"w": _dense(ks[0], D, D, F)},
+            "wg": {"w": _dense(ks[1], D, D, F)},
+            "wdown": {"w": _dense(ks[2], F, F, D)}}
+
+
+def apply_mlp(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+              mesh=None) -> jnp.ndarray:
+    dtype = cdtype(cfg)
+    if cfg.mlp_gelu:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"]["w"].astype(dtype))
+        h = jax.nn.gelu(h + p["wi"]["bias"].astype(dtype))
+        h = shd.constrain(h, mesh, shd.DP, None, shd.TP)
+        return jnp.einsum("bsf,fd->bsd", h,
+                          p["wdown"]["w"].astype(dtype)) \
+            + p["wdown"]["bias"].astype(dtype)
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"]["w"].astype(dtype))
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"]["w"].astype(dtype))
+    h = jax.nn.silu(g) * h
+    h = shd.constrain(h, mesh, shd.DP, None, shd.TP)
+    return jnp.einsum("bsf,fd->bsd", h, p["wdown"]["w"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    p = {"embed": {"w": _dense(ks[0], cfg.d_model,
+                               cfg.vocab_size, cfg.d_model)}}
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"w": _dense(ks[1], cfg.d_model,
+                                    cfg.d_model, cfg.vocab_size)}
+    return p
+
+
+def embed_tokens(p: Params, cfg: ModelConfig, tokens: jnp.ndarray):
+    return p["embed"]["w"].astype(cdtype(cfg))[tokens]
+
+
+def unembed(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = p["embed"]["w"].astype(cdtype(cfg)).T
+    else:
+        w = p["unembed"]["w"].astype(cdtype(cfg))
+    return jnp.einsum("bsd,dv->bsv", x, w)

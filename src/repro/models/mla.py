@@ -1,0 +1,129 @@
+"""Multi-head Latent Attention (DeepSeek-V2), TPU-adapted.
+
+MLA compresses K/V into a ``kv_lora_rank``-dim latent c_kv plus a
+shared ``qk_rope_dim`` decoupled-RoPE key.  The decode cache stores
+only (c_kv, k_rope) — (rank + rope) floats per position instead of
+2 * H * hd — which is the whole point: the 32k-cache decode cell for
+deepseek-v2-lite carries 512+64 = 576 f per token vs 16*2*192 = 6144.
+
+Cache-efficient decode uses the "absorbed" formulation: q_nope is
+mapped through W_UK into latent space so attention scores are computed
+directly against the cached latents, and W_UV is applied after the
+weighted sum — no per-step decompression of the whole cache.
+
+Prefill/train uses the naive (decompress) formulation, which is
+matmul-dominant and MXU-friendly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import sharding as shd
+from .layers import (Params, _dense, apply_rope, cdtype, chunked_attention,
+                     rms_norm, init_rmsnorm)
+
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    D, H = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    ks = jax.random.split(key, 5)
+    return {
+        # queries: full-rank projection to H * (nope + rope)
+        "wq": {"w": _dense(ks[0], D, D, H * (dn + dr))},
+        # kv down-projection: D -> r latent (+ shared rope key)
+        "kv_a": {"w": _dense(ks[1], D, D, r + dr)},
+        "kv_norm": init_rmsnorm(r),
+        # kv up-projection: r -> H * (nope_k + v)
+        "kv_b": {"w": _dense(ks[2], r, r, H * (dn + dv))},
+        "wo": {"w": _dense(ks[3], H * dv, H * dv, D)},
+    }
+
+
+def _split_qb(q, H, dn, dr):
+    B, S, _ = q.shape
+    q = q.reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def apply_mla(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+              mesh=None, positions: Optional[jnp.ndarray] = None,
+              cache: Optional[Params] = None
+              ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    dtype = cdtype(cfg)
+    B, S, D = x.shape
+    H = cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    scale = 1.0 / np.sqrt(dn + dr)
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]["w"].astype(dtype))
+    q_nope, q_rope = _split_qb(q, H, dn, dr)
+    kv = jnp.einsum("bsd,dh->bsh", x, p["kv_a"]["w"].astype(dtype))
+    c_kv, k_rope = kv[..., :r], kv[..., r:]
+    c_kv = rms_norm(p["kv_norm"], c_kv, cfg.norm_eps)
+
+    if cache is not None:
+        cur = cache["len"]
+        pos = jnp.full((B, S), cur, jnp.int32)
+    else:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                               (B, S)) if positions is None else positions
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], pos,
+                        cfg.rope_theta)[..., 0, :]       # shared head
+
+    wkv_b = p["kv_b"]["w"].astype(dtype).reshape(r, H, dn + dv)
+    wk_b, wv_b = wkv_b[..., :dn], wkv_b[..., dn:]
+
+    if cache is None:
+        # naive decompress: k_nope/v from latents, standard GQA-1 attn
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, wk_b)
+        v = jnp.einsum("bsr,rhd->bshd", c_kv, wv_b)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, dr))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qf = shd.constrain(qf, mesh, shd.DP, None, shd.TP, None)
+        k = shd.constrain(k, mesh, shd.DP, None, shd.TP, None)
+        out = chunked_attention(qf, k, v, causal=True)
+        new_cache = None
+    else:
+        # absorbed decode: score against cached latents directly
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(dtype), cache["len"], 1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(dtype), cache["len"], 1)
+        new_cache = {"c_kv": ckv_c, "k_rope": kr_c,
+                     "len": cache["len"] + 1}
+        # q_nope (B,1,H,dn) @ wk_b (r,H,dn) -> latent-space queries
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk_b)  # (B,1,H,r)
+        Smax = ckv_c.shape[1]
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                             ckv_c.astype(jnp.float32))
+                  + jnp.einsum("bshd,btd->bhst",
+                               q_rope.astype(jnp.float32),
+                               kr_c.astype(jnp.float32))) * scale
+        valid = jnp.arange(Smax)[None, None, None, :] < (cache["len"] + 1)
+        w = jax.nn.softmax(jnp.where(valid, scores, -1e30), axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", w.astype(jnp.float32),
+                         ckv_c.astype(jnp.float32))      # (B,1,H,r)
+        out = jnp.einsum("bshr,rhd->bshd", ctx.astype(dtype), wv_b)
+
+    out = out.reshape(B, S, H * dv)
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"]["w"].astype(dtype))
+    return y, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dtype = cdtype(cfg)
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "len": jnp.asarray(0, jnp.int32),
+    }

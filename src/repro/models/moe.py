@@ -1,0 +1,129 @@
+"""Token-choice top-k Mixture-of-Experts (GShard/Switch-style).
+
+Dispatch is the capacity-bounded masked-einsum formulation: tokens are
+split into groups of ``router_group``; within a group each expert takes
+at most C = ceil(k * group * capacity_factor / E) tokens (overflow
+dropped, standard at scale).  The dispatch/combine einsums add
+~k*cf*group*D flops per token group — a few percent of the expert
+matmuls at the pool's sizes — in exchange for a fully static, MXU- and
+pjit-friendly dataflow:
+
+  experts weights (E, D, F) shard (None, DP, TP)    [expert weights FSDP+TP]
+  expert inputs   (E, G, C, D) shard dp on G        [token groups stay DP]
+
+Shared experts (DeepSeek-V2) run densely on every token.
+
+Aux losses: load-balancing (Switch) + router z-loss (ST-MoE), returned
+for the train loop to add.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import sharding as shd
+from .layers import Params, _dense, cdtype
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": {"w": _dense(ks[0], D, D, E)},
+        "experts_gate": {"w": _dense(ks[1], D, E, D, F)},
+        "experts_in": {"w": _dense(ks[2], D, E, D, F)},
+        "experts_down": {"w": _dense(ks[3], F, E, F, D)},
+    }
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        p["shared_gate"] = {"w": _dense(ks[4], D, D, Fs)}
+        p["shared_in"] = {"w": _dense(ks[5], D, D, Fs)}
+        p["shared_down"] = {"w": _dense(ks[6], Fs, Fs, D)}
+    return p
+
+
+def apply_moe(p: Params, cfg: ModelConfig, x: jnp.ndarray, mesh=None
+              ) -> Tuple[jnp.ndarray, Params]:
+    """x (B, S, D) -> (out, aux-losses dict)."""
+    dtype = cdtype(cfg)
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = min(cfg.router_group, T)
+    assert T % G == 0, f"tokens {T} not divisible by group {G}"
+    n_groups = T // G
+    C = int(np.ceil(K * G * cfg.capacity_factor / E))
+    C = max(4, min(C, G))
+
+    xt = x.reshape(n_groups, G, D)
+
+    logits = jnp.einsum("ngd,de->nge", xt.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gates per token
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)       # (n, G, K)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert via masked cumsum
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (n,G,K,E)
+    flat = onehot.reshape(n_groups, G * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                # rank within expert
+    pos = pos.reshape(n_groups, G, K, E)
+    keep = (pos < C).astype(jnp.float32) * onehot
+    # dispatch/combine (n, G, E, C): one-hot over capacity slot
+    slot = jax.nn.one_hot(pos, C, dtype=jnp.float32)     # (n,G,K,E,C)
+    dispatch = jnp.einsum("ngke,ngkec->ngec", keep, slot)
+    combine = jnp.einsum("ngk,ngke,ngkec->ngec",
+                         gate_vals.astype(jnp.float32), keep, slot)
+
+    # expert inputs: (n, E, C, D)
+    ein = jnp.einsum("ngec,ngd->necd", dispatch,
+                     xt.astype(jnp.float32)).astype(dtype)
+    ep_on = (shd.flag("ep") and mesh is not None
+             and E % shd._axis_size(mesh, shd.TP) == 0)
+    if ep_on:
+        # expert parallelism: the dispatched tokens move to their
+        # expert's shard (all-to-all over the model axis); expert
+        # compute and weights stay local to the shard
+        ein = shd.constrain(ein, mesh, shd.DP, shd.TP, None, None)
+    else:
+        ein = shd.constrain(ein, mesh, shd.DP, None, None, None)
+
+    g = jnp.einsum("necd,edf->necf", ein, p["experts_gate"]["w"]
+                   .astype(dtype))
+    h = jnp.einsum("necd,edf->necf", ein, p["experts_in"]["w"]
+                   .astype(dtype))
+    h = jax.nn.silu(g) * h
+    if ep_on:
+        h = shd.constrain(h, mesh, shd.DP, shd.TP, None, None)
+    else:
+        h = shd.constrain(h, mesh, shd.DP, None, None, shd.TP)
+    eout = jnp.einsum("necf,efd->necd", h, p["experts_down"]["w"]
+                      .astype(dtype))
+
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(jnp.float32),
+                     eout.astype(jnp.float32))
+    out = out.reshape(B, S, D).astype(dtype)
+
+    if cfg.n_shared_experts:
+        sg = jnp.einsum("bsd,df->bsf", x, p["shared_gate"]["w"]
+                        .astype(dtype))
+        sh = jnp.einsum("bsd,df->bsf", x, p["shared_in"]["w"]
+                        .astype(dtype))
+        sh = jax.nn.silu(sg) * sh
+        out = out + jnp.einsum("bsf,fd->bsd", sh,
+                               p["shared_down"]["w"].astype(dtype))
+
+    # aux losses
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))     # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(frac_tokens * frac_probs) / max(K, 1)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss}
+    return out, aux

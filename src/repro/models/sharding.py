@@ -1,0 +1,192 @@
+"""Path-based parameter partition rules (t5x-style).
+
+Mesh axes: ("pod", "data", "model") multi-pod, ("data", "model")
+single-pod.  DP/FSDP runs over the ("pod","data") product; TP/EP/SP
+over "model".
+
+Rules map parameter *path names* to logical PartitionSpecs; a fitting
+pass drops any axis that does not divide the concrete dimension
+(e.g. 24 SSD heads on a 16-way model axis -> replicated), so every
+architecture in the pool shards without per-arch special cases.
+
+Scanned layer stacks carry a leading ``layers`` dimension that is never
+sharded (prepended None).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP = "__dp__"    # placeholder expanded to the mesh's data axes
+TP = "model"
+
+# Trace-time perf policy: a comma-joined flag set (variant string).
+#   dponly     — treat the model axis as extra data parallelism and
+#                disable every TP activation constraint (small-model
+#                regime where TP would replicate attention compute)
+#   chunkremat — jax.checkpoint each attention q-chunk so backward
+#                recomputes scores instead of stacking them in HBM
+#   bf16scores — materialize attention scores/weights in bf16 (f32
+#                softmax maths, fused) — the MXU-native layout
+_POLICY = contextvars.ContextVar("perf_policy", default=frozenset())
+
+
+@contextlib.contextmanager
+def policy(name: str):
+    flags = frozenset(f for f in name.split(",") if f)
+    tok = _POLICY.set(flags)
+    try:
+        yield
+    finally:
+        _POLICY.reset(tok)
+
+
+def flag(name: str) -> bool:
+    return name in _POLICY.get()
+
+
+def _extra_dp() -> bool:
+    return flag("dponly")
+
+# (regex over "/"-joined path, spec for the *trailing* dims of the param)
+_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # embeddings / unembedding: (vocab, d)
+    (r"embed", (TP, DP)),
+    (r"unembed", (DP, TP)),
+    # attention
+    (r"wq/bias|wk/bias|wv/bias", (TP,)),
+    (r"wq", (DP, TP)),
+    (r"wk", (DP, TP)),
+    (r"wv", (DP, TP)),
+    (r"wo", (TP, DP)),
+    # MLA
+    (r"q_a|kv_a", (DP, None)),
+    (r"q_b|kv_b", (None, TP)),
+    # dense mlp
+    (r"wi|wg", (DP, TP)),
+    (r"wdown", (TP, DP)),
+    # moe
+    (r"router", (DP, None)),
+    (r"experts_in|experts_gate", (None, DP, TP)),
+    (r"experts_down", (None, TP, DP)),
+    (r"shared_in|shared_gate", (DP, TP)),
+    (r"shared_down", (TP, DP)),
+    # ssd / mamba2
+    (r"ssm_in", (DP, TP)),
+    (r"ssm_out", (TP, DP)),
+    (r"conv_w", (None, TP)),
+    (r"A_log|ssm_D|dt_bias", (TP,)),
+    # norms, scalars, everything small
+    (r"norm|scale|bias", (None,)),
+)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    names = ("pod", "data", "model") if _extra_dp() else ("pod", "data")
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def _expand(spec_entry, mesh: Mesh):
+    if spec_entry == DP:
+        return dp_axes(mesh)
+    if spec_entry == TP and _extra_dp():
+        return None          # model axis is data-parallel in dponly
+    return spec_entry
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[a] for a in entry])) if entry else 1
+    return mesh.shape[entry]
+
+
+# Expert-parallel overrides (the ``ep`` perf flag): expert weights
+# (E, D, F) shard their EXPERT dim over the model axis, so expert-grad
+# reductions and FSDP gathers move 1/EP of the bytes; tokens reach
+# their experts through the dispatch all-to-all instead.
+_EP_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"experts_in|experts_gate", (TP, DP, None)),
+    (r"experts_down", (TP, None, DP)),
+)
+
+
+def spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh,
+             scanned: bool) -> P:
+    """Resolve the partition spec for one parameter."""
+    trailing = len(shape) - (1 if scanned else 0)
+    rules = _RULES
+    if flag("ep") and "experts_" in path:
+        # EP engages only when the expert count divides the model
+        # axis; otherwise fall back to the dense-style rules (with 8
+        # experts on a 16-way axis the fit pass would drop the expert
+        # axis AND the d_ff sharding -> measured 606 GiB/dev blowup)
+        e_dim = shape[1 if scanned else 0]
+        if e_dim % _axis_size(mesh, TP) == 0:
+            rules = _EP_RULES + _RULES
+    for pat, rule in rules:
+        if re.search(pat, path):
+            rule = rule[-trailing:] if trailing <= len(rule) else \
+                (None,) * (trailing - len(rule)) + rule
+            entries = [_expand(e, mesh) for e in rule]
+            # drop axes that don't divide the concrete dim
+            dims = shape[-trailing:] if trailing else ()
+            fitted = []
+            for dim, e in zip(dims, entries):
+                fitted.append(e if dim % _axis_size(mesh, e) == 0 else None)
+            if scanned:
+                fitted = [None] + fitted
+            return P(*fitted)
+    return P()  # replicate unknown params
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_shardings(params: Any, mesh: Mesh, scanned_paths=("stack",)):
+    """Pytree of NamedShardings matching ``params``.
+
+    Parameters under a path containing any of ``scanned_paths`` are
+    treated as scanned stacks (leading layer dim unsharded).
+    """
+
+    def f(path, x):
+        ps = _path_str(path)
+        scanned = any(s in ps for s in scanned_paths)
+        return NamedSharding(mesh, spec_for(ps, x.shape, mesh, scanned))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """Shard the batch over dp axes when divisible, else replicate."""
+    axes = dp_axes(mesh)
+    if axes and batch % _axis_size(mesh, axes) == 0:
+        return P(axes)
+    return P()
+
+
+def constrain(x, mesh: Mesh, *spec_entries):
+    """with_sharding_constraint that drops non-dividing axes."""
+    if mesh is None:
+        return x
+    fitted = []
+    for dim, e in zip(x.shape, spec_entries):
+        e = _expand(e, mesh)
+        fitted.append(e if (e and dim % _axis_size(mesh, e) == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fitted)))

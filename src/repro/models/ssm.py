@@ -1,0 +1,176 @@
+"""Mamba2 / SSD (state-space duality) block, TPU-adapted.
+
+The SSD chunked algorithm maps naturally onto the MXU: within a chunk
+of length L the recurrence is computed as an (L x L) masked matmul
+(quadratic-but-tiny, MXU-shaped), and across chunks a small
+(H, N, P) state is carried by a ``lax.scan`` — O(S) work, O(1) decode
+state.  This is the TPU-native replacement for the CUDA selective-scan
+kernel: no warp shuffles needed, the duality *is* the adaptation.
+
+Decode keeps (conv window, SSD state) — constant-size cache, which is
+why mamba2/jamba run the 500k-context cell that full-attention archs
+skip.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import sharding as shd
+from .layers import Params, _dense, cdtype, rms_norm
+
+G = 1  # ssm groups (ngroups=1 for the pool's archs)
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    di = cfg.d_inner_ssm
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    W = cfg.conv_width
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "ssm_in": {"w": _dense(ks[0], D, D, 2 * di + 2 * G * N + H)},
+        "conv_w": jnp.zeros((W, conv_ch), jnp.float32)
+        .at[W - 1].set(1.0),                      # identity-ish init
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "ssm_D": jnp.ones((H,), jnp.float32),
+        "gate_norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "ssm_out": {"w": _dense(ks[3], di, di, D)},
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width W.  xbc (B,S,CH), w (W,CH).
+
+    prev (B,W-1,CH) is the decode carry; returns (out, new_prev).
+    """
+    Wd = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros_like(xbc[:, : Wd - 1])
+    else:
+        pad = prev
+    full = jnp.concatenate([pad, xbc], axis=1)           # (B, S+W-1, CH)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(Wd))
+    out = jax.nn.silu(out + b)
+    new_prev = full[:, -(Wd - 1):]
+    return out, new_prev
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD scan.  x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    L = chunk
+    xc = x.reshape(Bb, nc, L, H, P)
+    dtc = dt.reshape(Bb, nc, L, H)
+    Bc = Bm.reshape(Bb, nc, L, N)
+    Cc = Cm.reshape(Bb, nc, L, N)
+
+    la = dtc * A[None, None, None, :]                    # log-decay, <=0
+    cum = jnp.cumsum(la, axis=2)                         # (B,nc,L,H)
+
+    # intra-chunk: M[t,s] = C_t.B_s * exp(cum_t - cum_s) * dt_s, s<=t
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)           # (B,nc,L,L)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    # mask BEFORE the exp: exp of the (s > t) branch can overflow and a
+    # masked inf still poisons the gradient through where().
+    decay = jnp.exp(jnp.where(tri, seg, -1e30))
+    M = CB[..., None] * decay * dtc[:, :, None, :, :]    # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", M, xc)
+
+    # chunk summaries: S_c = sum_s exp(cum_L - cum_s) dt_s B_s x_s^T
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,L,H)
+    Sc = jnp.einsum("bclh,bcln,bclhp->bchnp",
+                    dec_end * dtc, Bc, xc)               # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    # inter-chunk recurrence over the nc axis
+    def body(s, args):
+        sc, cd = args                                    # (B,H,N,P),(B,H)
+        y_state = s                                      # state BEFORE chunk
+        s_new = cd[:, :, None, None] * s + sc
+        return s_new, y_state
+
+    s0 = (jnp.zeros((Bb, H, N, P), x.dtype) if init_state is None
+          else init_state)
+    final, states = jax.lax.scan(
+        body, s0, (Sc.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    states = states.transpose(1, 0, 2, 3, 4)             # (B,nc,H,N,P)
+
+    # y_inter[t] = C_t . (exp(cum_t) * S_chunk_in)
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp",
+                         Cc, jnp.exp(cum), states)
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, final
+
+
+def apply_mamba2(p: Params, cfg: ModelConfig, xin: jnp.ndarray, *,
+                 mesh=None, cache: Optional[Params] = None
+                 ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    dtype = cdtype(cfg)
+    B, S, D = xin.shape
+    di, N, H, P = (cfg.d_inner_ssm, cfg.ssm_state, cfg.ssm_heads,
+                   cfg.ssm_head_dim)
+
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p["ssm_in"]["w"].astype(dtype))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * G * N]
+    dt_raw = zxbcdt[..., -H:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    prev = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(dtype),
+                                 p["conv_b"].astype(dtype), prev)
+    x = xbc[..., :di].reshape(B, S, H, P)
+    Bm = xbc[..., di: di + G * N].astype(jnp.float32)
+    Cm = xbc[..., di + G * N:].astype(jnp.float32)
+
+    x = shd.constrain(x, mesh, shd.DP, None, shd.TP, None)
+
+    if cache is None:
+        y, _ = _ssd_chunked(x.astype(jnp.float32), dt, A, Bm, Cm,
+                            min(cfg.ssm_chunk, S))
+        new_cache = None
+    else:
+        # single-step: s' = exp(dt A) s + dt B x^T ; y = C . s'
+        s = cache["state"].astype(jnp.float32)           # (B,H,N,P)
+        da = jnp.exp(dt[:, 0, :] * A[None, :])           # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0, :], Bm[:, 0],
+                         x[:, 0].astype(jnp.float32))
+        s = da[:, :, None, None] * s + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], s)[:, None]
+        new_cache = {"conv": new_conv, "state": s.astype(dtype)}
+
+    y = y + p["ssm_D"].astype(jnp.float32)[None, None, :, None] \
+        * x.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(dtype)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["ssm_out"]["w"].astype(dtype))
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int) -> Params:
+    dtype = cdtype(cfg)
+    conv_ch = cfg.d_inner_ssm + 2 * G * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), dtype),
+    }

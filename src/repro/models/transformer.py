@@ -1,0 +1,389 @@
+"""Transformer assembly: scanned layer stacks, loss, and decode step.
+
+The layer stack is organized as (prologue layers) + (pattern x repeats)
+where the pattern is a tuple of ``LayerSpec``s.  The repeats are
+``lax.scan``-ed over stacked parameters — one trace regardless of depth
+(compile time and HLO size stay flat from smollm-30L to grok-64L) — and
+the scan body is ``jax.checkpoint``-ed so only repeat boundaries are
+saved (activation memory = n_repeats x hidden, sequence-sharded).
+
+Supports decoder-only LMs (with optional modality-frontend embeddings
+prepended) and encoder-decoder (whisper) through the same machinery.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as shd
+from .config import LayerSpec, ModelConfig
+from .layers import (Params, apply_attention, apply_mlp, cdtype,
+                     embed_tokens, init_attention, init_attn_cache,
+                     init_embed, init_layernorm, init_mlp, init_rmsnorm,
+                     layer_norm, rms_norm, sinusoid_pos, unembed)
+from .mla import apply_mla, init_mla, init_mla_cache
+from .moe import apply_moe, init_moe
+from .ssm import apply_mamba2, init_mamba2, init_mamba2_cache
+
+
+def _norm(cfg: ModelConfig):
+    return (init_layernorm, layer_norm) if cfg.use_layernorm \
+        else (init_rmsnorm, rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec) -> Params:
+    init_n, _ = _norm(cfg)
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": init_n(cfg.d_model)}
+    if spec.mixer == "attn":
+        p["attn"] = init_attention(ks[0], cfg)
+    elif spec.mixer == "mla":
+        p["attn"] = init_mla(ks[0], cfg)
+    elif spec.mixer == "mamba2":
+        p["mixer"] = init_mamba2(ks[0], cfg)
+    if spec.cross:
+        p["norm_cross"] = init_n(cfg.d_model)
+        p["cross"] = init_attention(ks[2], cfg)
+    if spec.mlp != "none":
+        p["norm2"] = init_n(cfg.d_model)
+        if spec.mlp == "moe":
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def init_decoder(key, cfg: ModelConfig) -> Params:
+    init_n, _ = _norm(cfg)
+    ks = jax.random.split(key, 4 + len(cfg.prologue))
+    params: Params = {"tok": init_embed(ks[0], cfg)}
+    for i, spec in enumerate(cfg.prologue):
+        params[f"pro{i}"] = _init_layer(ks[1 + i], cfg, spec)
+
+    # stacked pattern repeats: init one repeat per scan index
+    def one_repeat(k):
+        kk = jax.random.split(k, len(cfg.pattern))
+        return {f"l{i}": _init_layer(kk[i], cfg, s)
+                for i, s in enumerate(cfg.pattern)}
+
+    rep_keys = jax.random.split(ks[-2], cfg.repeats)
+    params["stack"] = jax.vmap(one_repeat)(rep_keys)
+    params["final_norm"] = init_n(cfg.d_model)
+    return params
+
+
+def init_encoder(key, cfg: ModelConfig) -> Params:
+    """Whisper-style encoder: bidirectional attn + GELU mlp, scanned."""
+    init_n, _ = _norm(cfg)
+    spec = LayerSpec(mixer="attn", mlp="dense")
+    ks = jax.random.split(key, cfg.n_encoder_layers)
+    stack = jax.vmap(lambda k: {"l0": _init_layer(k, cfg, spec)})(ks)
+    return {"stack": stack, "final_norm": init_n(cfg.d_model)}
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = init_decoder(k1, cfg)
+    if cfg.is_encoder_decoder:
+        p["encoder"] = init_encoder(k2, cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(lp: Params, cfg: ModelConfig, spec: LayerSpec,
+                 x: jnp.ndarray, *, mesh, causal: bool,
+                 cache: Optional[Params], cross_kv: Optional[Params],
+                 positions) -> Tuple[jnp.ndarray, Optional[Params], Any]:
+    _, norm = _norm(cfg)
+    aux = None
+    h = norm(lp["norm1"], x, cfg.norm_eps)
+    sub_cache = None if cache is None else cache.get("mixer")
+    if spec.mixer == "attn":
+        mix, new_sub = apply_attention(
+            lp["attn"], cfg, h, mesh=mesh, causal=causal,
+            window=spec.window, cache=sub_cache, positions=positions,
+            use_rope=cfg.use_rope)
+    elif spec.mixer == "mla":
+        mix, new_sub = apply_mla(lp["attn"], cfg, h, mesh=mesh,
+                                 cache=sub_cache, positions=positions)
+    else:
+        mix, new_sub = apply_mamba2(lp["mixer"], cfg, h, mesh=mesh,
+                                    cache=sub_cache)
+    x = x + mix
+    new_cache: Optional[Params] = None
+    if cache is not None:
+        new_cache = {"mixer": new_sub}
+
+    if spec.cross:
+        h = norm(lp["norm_cross"], x, cfg.norm_eps)
+        # decode: precomputed cross K/V in the cache; train/prefill:
+        # fresh projection of the encoder output.
+        if cache is not None and "cross" in cache:
+            mix, _ = _cross_from_cache(lp["cross"], cfg, h,
+                                       cache["cross"])
+        else:
+            mix, _ = apply_attention(lp["cross"], cfg, h, mesh=mesh,
+                                     causal=False, kv_src=cross_kv,
+                                     use_rope=False)
+        x = x + mix
+
+    if spec.mlp != "none":
+        h = norm(lp["norm2"], x, cfg.norm_eps)
+        if spec.mlp == "moe":
+            out, aux = apply_moe(lp["moe"], cfg, h, mesh=mesh)
+        else:
+            out = apply_mlp(lp["mlp"], cfg, h, mesh=mesh)
+        x = x + out
+    return x, new_cache, aux
+
+
+def _cross_from_cache(p, cfg: ModelConfig, h, ck):
+    """Decode-time cross attention against precomputed K/V."""
+    from .layers import decode_attention, _proj
+    dtype = cdtype(cfg)
+    B, S, D = h.shape
+    q = _proj(p["wq"], h, cfg.n_heads, cfg.head_dim, dtype)
+    out = decode_attention(q, ck["k"], ck["v"], ck["k"].shape[1])
+    y = jnp.einsum("bsh,hd->bsd",
+                   out.reshape(B, S, cfg.n_heads * cfg.head_dim),
+                   p["wo"]["w"].astype(dtype))
+    return y, None
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def _stack_scan(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                mesh, causal: bool, caches: Optional[Params],
+                cross_kv, positions, remat: bool,
+                stack_key: str = "stack",
+                pattern: Optional[Tuple[LayerSpec, ...]] = None):
+    """Scan the stacked repeats; returns (x, new_caches, aux_sum)."""
+    pattern = pattern or cfg.pattern
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        rep_params, rep_cache = xs
+        new_rep_cache = {} if rep_cache is not None else None
+        for i, spec in enumerate(pattern):
+            sub = None if rep_cache is None else rep_cache[f"l{i}"]
+            h, nc, aux = _apply_layer(
+                rep_params[f"l{i}"], cfg, spec, h, mesh=mesh,
+                causal=causal, cache=sub, cross_kv=cross_kv,
+                positions=positions)
+            if new_rep_cache is not None:
+                new_rep_cache[f"l{i}"] = _keep_cross(nc, sub)
+            if aux is not None:
+                aux_acc = aux_acc + aux["lb_loss"] + 1e-3 * aux["z_loss"]
+        h = shd.constrain(h, mesh, shd.DP, shd.TP, None)
+        return (h, aux_acc), new_rep_cache
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (params[stack_key], caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.asarray(0.0)), xs)
+    return x, new_caches, aux
+
+
+def _keep_cross(nc, old):
+    """Carry the (static) cross-attn K/V cache through scan steps."""
+    if old is not None and "cross" in old:
+        nc = dict(nc or {})
+        nc["cross"] = old["cross"]
+    return nc
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            mesh=None, remat: bool = True) -> Tuple[jnp.ndarray, Any]:
+    """Training/prefill forward -> (logits, aux_loss).
+
+    batch: tokens (B,S) [+ frontend (B,Tf,D)] [+ enc_frames (B,Te,D)].
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(params["tok"], cfg, tokens)
+    positions = None
+    if cfg.n_frontend_tokens and "frontend" in batch:
+        fe = batch["frontend"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    if not cfg.use_rope:
+        x = x + sinusoid_pos(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    x = shd.constrain(x, mesh, shd.DP, shd.TP, None)
+
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        cross_kv = encode(params, cfg, batch["enc_frames"], mesh=mesh,
+                          remat=remat)
+
+    aux_total = jnp.asarray(0.0)
+    for i, spec in enumerate(cfg.prologue):
+        x, _, aux = _apply_layer(params[f"pro{i}"], cfg, spec, x,
+                                 mesh=mesh, causal=True, cache=None,
+                                 cross_kv=cross_kv, positions=positions)
+        if aux is not None:
+            aux_total += aux["lb_loss"] + 1e-3 * aux["z_loss"]
+
+    x, _, aux = _stack_scan(params, cfg, x, mesh=mesh, causal=True,
+                            caches=None, cross_kv=cross_kv,
+                            positions=positions, remat=remat)
+    aux_total = aux_total + aux
+
+    _, norm = _norm(cfg)
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.n_frontend_tokens and "frontend" in batch:
+        x = x[:, batch["frontend"].shape[1]:]
+    logits = unembed(params["tok"], cfg, x)
+    return logits, aux_total
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray, *,
+           mesh=None, remat: bool = True) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings (B, Te, D)."""
+    x = frames.astype(cdtype(cfg))
+    x = x + sinusoid_pos(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    x = shd.constrain(x, mesh, shd.DP, shd.TP, None)
+    x, _, _ = _stack_scan(params["encoder"], cfg, x, mesh=mesh,
+                          causal=False, caches=None, cross_kv=None,
+                          positions=None, remat=remat,
+                          pattern=(LayerSpec(mixer="attn", mlp="dense"),))
+    _, norm = _norm(cfg)
+    return norm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            mesh=None, remat: bool = True):
+    logits, aux = forward(params, cfg, batch, mesh=mesh, remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - gold) * mask) / jnp.clip(mask.sum(), 1.0)
+    loss = nll + 1e-2 * aux
+    return loss, {"nll": nll, "aux": aux,
+                  "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# decode / serve
+# ---------------------------------------------------------------------------
+
+def init_serve_cache(params: Params, cfg: ModelConfig, batch: int,
+                     max_len: int, enc_out: Optional[jnp.ndarray] = None,
+                     prefilled: int = 0) -> Params:
+    """Allocate (optionally 'pre-filled') decode caches for all layers."""
+
+    def one_layer(spec: LayerSpec) -> Params:
+        c: Params = {}
+        if spec.mixer == "attn":
+            c["mixer"] = init_attn_cache(cfg, batch, max_len, spec.window)
+        elif spec.mixer == "mla":
+            c["mixer"] = init_mla_cache(cfg, batch, max_len)
+        else:
+            c["mixer"] = init_mamba2_cache(cfg, batch)
+        # the position counter lives once in caches["pos"], not per layer
+        c["mixer"].pop("len", None)
+        return c
+
+    def stack_caches(pattern, n):
+        def rep(_):
+            return {f"l{i}": one_layer(s) for i, s in enumerate(pattern)}
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[rep(i) for i in range(n)]) if n > 1 else jax.tree.map(
+                lambda x: x[None], rep(0))
+
+    caches: Params = {
+        "stack": stack_caches(cfg.pattern, cfg.repeats),
+        "pro": [one_layer(s) for s in cfg.prologue],
+        "pos": jnp.asarray(prefilled, jnp.int32),
+    }
+    if cfg.is_encoder_decoder and enc_out is not None \
+            and any(s.cross for s in cfg.pattern):
+        # precompute per-layer cross K/V once (the real serving path)
+        from .layers import _proj
+        dtype = cdtype(cfg)
+
+        def cross_kv(cp):
+            k = _proj(cp["wk"], enc_out.astype(dtype),
+                      cfg.n_kv_heads, cfg.head_dim, dtype)
+            v = _proj(cp["wv"], enc_out.astype(dtype),
+                      cfg.n_kv_heads, cfg.head_dim, dtype)
+            return {"k": k, "v": v}
+
+        caches["stack_cross"] = {
+            f"l{i}": jax.vmap(cross_kv)(params["stack"][f"l{i}"]["cross"])
+            for i, s in enumerate(cfg.pattern) if s.cross}
+    return caches
+
+
+def serve_step(params: Params, cfg: ModelConfig, caches: Params,
+               tokens: jnp.ndarray, *, mesh=None
+               ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new caches)."""
+    x = embed_tokens(params["tok"], cfg, tokens)
+    if not cfg.use_rope:
+        pe = sinusoid_pos(cfg.max_seq_len, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            pe, caches["pos"], 1, 0)[None].astype(x.dtype)
+    pos = caches["pos"]
+
+    new_pro = []
+    for i, spec in enumerate(cfg.prologue):
+        c = dict(caches["pro"][i])
+        c["mixer"] = _with_len(c["mixer"], pos)
+        x, nc, _ = _apply_layer(params[f"pro{i}"], cfg, spec, x,
+                                mesh=mesh, causal=True, cache=c,
+                                cross_kv=None, positions=None)
+        new_pro.append(_strip_len(nc))
+
+    def body(carry, xs):
+        h = carry
+        rep_params, rep_cache, rep_cross = xs
+        new_rep = {}
+        for i, spec in enumerate(cfg.pattern):
+            c = dict(rep_cache[f"l{i}"])
+            c["mixer"] = _with_len(c["mixer"], pos)
+            if rep_cross is not None and f"l{i}" in rep_cross:
+                c["cross"] = rep_cross[f"l{i}"]
+            h, nc, _ = _apply_layer(rep_params[f"l{i}"], cfg, spec, h,
+                                    mesh=mesh, causal=True, cache=c,
+                                    cross_kv=None, positions=None)
+            new_rep[f"l{i}"] = _strip_len(nc)
+        return h, new_rep
+
+    xs = (params["stack"], caches["stack"], caches.get("stack_cross"))
+    x, new_stack = jax.lax.scan(body, x, xs)
+
+    _, norm = _norm(cfg)
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["tok"], cfg, x)
+    new_caches = dict(caches)
+    new_caches["stack"] = new_stack
+    new_caches["pro"] = new_pro
+    new_caches["pos"] = pos + 1
+    return logits, new_caches
+
+
+def _with_len(c: Params, pos) -> Params:
+    c = dict(c)
+    if "k" in c or "c_kv" in c:
+        c["len"] = pos
+    return c
+
+
+def _strip_len(nc: Optional[Params]) -> Params:
+    out = dict(nc["mixer"]) if nc else {}
+    out.pop("len", None)
+    return {"mixer": out}

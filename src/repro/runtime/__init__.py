@@ -1,0 +1,5 @@
+from .fault import ElasticMesh, FailureSim, run_with_restarts
+from .straggler import StragglerMonitor
+
+__all__ = ["ElasticMesh", "FailureSim", "run_with_restarts",
+           "StragglerMonitor"]

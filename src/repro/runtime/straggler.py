@@ -1,0 +1,48 @@
+"""Straggler mitigation.
+
+On a synchronous TPU mesh the SPMD program itself cannot run ahead of a
+slow chip — mitigation happens at two levels:
+
+1. **By construction**: the MF padded-bucket layout gives every chip an
+   identical instruction stream and identical per-row work (no
+   data-dependent imbalance, unlike the CPU original's irregular rows).
+   The LM side is standard SPMD — equal shards.
+
+2. **Detection + re-mesh**: a persistently slow chip (thermal, failing
+   HBM) is detected by per-step timing watermarks; the runtime treats
+   it like a failure (drop the chip, rebuild the mesh via ElasticMesh,
+   restore).  ``StragglerMonitor`` implements the detection policy:
+   flag when a step exceeds ``threshold`` x the rolling median more
+   than ``patience`` times in a row.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 patience: int = 3):
+        self.times: Deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.patience = patience
+        self._slow_streak = 0
+
+    def record(self, step_time_s: float) -> bool:
+        """Record one step; True => persistent straggler, re-mesh."""
+        median = self.median()
+        self.times.append(step_time_s)
+        if median is None:
+            return False
+        if step_time_s > self.threshold * median:
+            self._slow_streak += 1
+        else:
+            self._slow_streak = 0
+        return self._slow_streak >= self.patience
+
+    def median(self) -> Optional[float]:
+        if len(self.times) < 5:
+            return None
+        s = sorted(self.times)
+        return s[len(s) // 2]

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src-layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Keep the default 1-device CPU platform for tests; only dryrun.py (its
+# own process) forces 512 placeholder devices.  Tests that need a few
+# devices spawn subprocesses (see test_distributed.py).

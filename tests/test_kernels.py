@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+
+Kernels run in interpret mode (CPU container; TPU is the target).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.gram import gram_pallas
+from repro.kernels.sddmm import sddmm_pallas
+
+
+@pytest.mark.parametrize("R,T,K", [
+    (1, 1, 1), (3, 5, 7), (8, 128, 16), (32, 24, 16),
+    (7, 130, 8), (64, 256, 128), (13, 257, 33), (100, 64, 64),
+])
+def test_gram_matches_ref(R, T, K):
+    key = jax.random.PRNGKey(R * 1000 + T * 10 + K)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vg = jax.random.normal(k1, (R, T, K), jnp.float32)
+    val = jax.random.normal(k2, (R, T), jnp.float32)
+    mask = (jax.random.uniform(k3, (R, T)) > 0.3).astype(jnp.float32)
+    g1, r1 = ops.gram_and_rhs(vg, val, mask, use_pallas=True)
+    g2, r2 = ref.gram_ref(vg, val, mask)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(r1, r2, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vg = jax.random.normal(k1, (16, 32, 8)).astype(dtype)
+    val = jax.random.normal(k2, (16, 32)).astype(dtype)
+    mask = (jax.random.uniform(k3, (16, 32)) > 0.5).astype(dtype)
+    g1, r1 = ops.gram_and_rhs(vg, val, mask, use_pallas=True)
+    g2, r2 = ref.gram_ref(vg, val, mask)
+    assert g1.dtype == jnp.float32  # fp32 accumulation contract
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(g1, g2, rtol=tol, atol=tol)
+    np.testing.assert_allclose(r1, r2, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("E,K", [(1, 3), (100, 16), (512, 128),
+                                 (1025, 64), (5, 200)])
+def test_sddmm_matches_ref(E, K):
+    key = jax.random.PRNGKey(E + K)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (E, K), jnp.float32)
+    b = jax.random.normal(k2, (E, K), jnp.float32)
+    np.testing.assert_allclose(
+        ops.sddmm(a, b, use_pallas=True), ref.sddmm_ref(a, b),
+        rtol=1e-5, atol=1e-4)
+
+
+def test_gram_block_shapes():
+    """Explicit BlockSpec tiling choices agree with the oracle."""
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(key, 3)
+    R, T, K = 16, 256, 16
+    vg = jax.random.normal(k1, (R, T, K), jnp.float32)
+    val = jax.random.normal(k2, (R, T), jnp.float32)
+    mask = (jax.random.uniform(k3, (R, T)) > 0.3).astype(jnp.float32)
+    g_ref, r_ref = ref.gram_ref(vg, val, mask)
+    for br, bt in [(4, 64), (8, 128), (16, 256), (2, 32)]:
+        g, r = gram_pallas(vg, val, mask, block_rows=br, block_nnz=bt,
+                           interpret=True)
+        np.testing.assert_allclose(g, g_ref, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(r, r_ref, rtol=1e-5, atol=1e-4)
+
+
+def test_sddmm_block_shapes():
+    key = jax.random.PRNGKey(9)
+    k1, k2 = jax.random.split(key)
+    E, K = 1024, 128
+    a = jax.random.normal(k1, (E, K), jnp.float32)
+    b = jax.random.normal(k2, (E, K), jnp.float32)
+    expect = ref.sddmm_ref(a, b)
+    for be, bk in [(128, 32), (512, 128), (1024, 64)]:
+        out = sddmm_pallas(a, b, block_e=be, block_k=bk, interpret=True)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-4)
+
+
+# -- properties -----------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 40), st.integers(1, 24),
+       st.integers(0, 2**31 - 1))
+def test_gram_psd_and_mask_zero(R, T, K, seed):
+    """gram is PSD; fully-masked rows give exactly zero gram/rhs."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vg = jax.random.normal(k1, (R, T, K), jnp.float32)
+    val = jax.random.normal(k2, (R, T), jnp.float32)
+    mask = (jax.random.uniform(k3, (R, T)) > 0.5).astype(jnp.float32)
+    mask = mask.at[0].set(0.0)          # row 0 fully padded
+    g, r = ref.gram_ref(vg, val, mask)
+    assert np.allclose(g[0], 0) and np.allclose(r[0], 0)
+    eig = np.linalg.eigvalsh(np.asarray(g))
+    assert eig.min() > -1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 32), st.integers(1, 16),
+       st.integers(0, 2**31 - 1))
+def test_gram_padding_invariance(R, T, K, seed):
+    """Appending masked padding never changes the result."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vg = jax.random.normal(k1, (R, T, K), jnp.float32)
+    val = jax.random.normal(k2, (R, T), jnp.float32)
+    mask = (jax.random.uniform(k3, (R, T)) > 0.3).astype(jnp.float32)
+    g1, r1 = ref.gram_ref(vg, val, mask)
+    pad = 13
+    vg2 = jnp.pad(vg, ((0, 0), (0, pad), (0, 0)),
+                  constant_values=3.14)   # garbage under the mask
+    val2 = jnp.pad(val, ((0, 0), (0, pad)), constant_values=-2.7)
+    mask2 = jnp.pad(mask, ((0, 0), (0, pad)))
+    g2, r2 = ref.gram_ref(vg2, val2, mask2)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(r1, r2, rtol=1e-5, atol=1e-5)

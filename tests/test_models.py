@@ -1,0 +1,135 @@
+"""Per-architecture smoke tests: reduced config of the same family,
+one forward/train step on CPU, output shapes + no NaNs (brief (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.models import (forward, init_model, init_serve_cache, loss_fn,
+                          param_count, serve_step)
+from repro.models.transformer import encode
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+    }
+    if cfg.n_frontend_tokens:
+        batch["frontend"] = jnp.asarray(rng.normal(
+            size=(B, cfg.n_frontend_tokens, cfg.d_model))
+            .astype(np.float32))
+    if cfg.is_encoder_decoder:
+        batch["enc_frames"] = jnp.asarray(rng.normal(
+            size=(B, cfg.encoder_frames, cfg.d_model)).astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_grad_serve(arch):
+    cfg = get_smoke(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch)[0])(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+    logits, _ = forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch["enc_frames"])
+    caches = init_serve_cache(params, cfg, B, 64, enc_out=enc_out,
+                              prefilled=5)
+    tok = jnp.asarray([[1], [2]], jnp.int32)
+    lg, caches2 = serve_step(params, cfg, caches, tok)
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(lg).any())
+    assert int(caches2["pos"]) == int(caches["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_validates(arch):
+    cfg = get_config(arch)
+    total, active = param_count(cfg)
+    assert total >= active > 0
+
+
+def test_param_counts_match_published():
+    """Full configs land near their advertised parameter counts."""
+    expect = {
+        "jamba_v01_52b": (52e9, 0.08),
+        "grok_1_314b": (314e9, 0.05),
+        "deepseek_v2_lite_16b": (15.7e9, 0.06),
+        "qwen25_32b": (32.5e9, 0.05),
+        "smollm_135m": (135e6, 0.05),
+        "yi_6b": (6e9, 0.06),
+        "qwen3_4b": (4e9, 0.12),
+        "mamba2_130m": (130e6, 0.10),
+        "internvl2_2b": (2e9, 0.12),
+        "whisper_medium": (769e6, 0.10),
+    }
+    for arch, (target, tol) in expect.items():
+        total, _ = param_count(get_config(arch))
+        assert abs(total - target) / target < tol, \
+            f"{arch}: {total/1e9:.2f}B vs {target/1e9:.2f}B"
+
+
+def test_decode_matches_forward_incremental():
+    """Decoding token-by-token equals the parallel forward pass."""
+    cfg = get_smoke("smollm_135m")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 12
+    toks = rng.integers(0, cfg.vocab_size, (B, S))
+    logits_par, _ = forward(params, cfg, {"tokens": jnp.asarray(toks)},
+                            remat=False)
+    caches = init_serve_cache(params, cfg, B, S + 4, prefilled=0)
+    outs = []
+    for t in range(S):
+        lg, caches = serve_step(params, cfg, caches,
+                                jnp.asarray(toks[:, t:t + 1]))
+        outs.append(np.asarray(lg[:, 0].astype(jnp.float32)))
+    dec = np.stack(outs, axis=1)
+    par = np.asarray(logits_par.astype(jnp.float32))
+    np.testing.assert_allclose(dec, par, rtol=0.08, atol=0.08)
+    # argmax agreement is the functional contract
+    agree = (dec.argmax(-1) == par.argmax(-1)).mean()
+    assert agree > 0.95, agree
+
+
+def test_decode_matches_forward_ssm():
+    """Same decode-vs-forward contract for the SSM (stateful) family."""
+    cfg = get_smoke("mamba2_130m")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    B, S = 2, 12
+    toks = rng.integers(0, cfg.vocab_size, (B, S))
+    logits_par, _ = forward(params, cfg, {"tokens": jnp.asarray(toks)},
+                            remat=False)
+    caches = init_serve_cache(params, cfg, B, S + 4, prefilled=0)
+    outs = []
+    for t in range(S):
+        lg, caches = serve_step(params, cfg, caches,
+                                jnp.asarray(toks[:, t:t + 1]))
+        outs.append(np.asarray(lg[:, 0].astype(jnp.float32)))
+    dec = np.stack(outs, axis=1)
+    par = np.asarray(logits_par.astype(jnp.float32))
+    agree = (dec.argmax(-1) == par.argmax(-1)).mean()
+    assert agree > 0.9, agree
+
+
+def test_moe_router_balanced_losses_present():
+    cfg = get_smoke("grok_1_314b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, met = loss_fn(params, cfg, batch)
+    assert float(met["aux"]) >= 0.0

@@ -1,0 +1,84 @@
+"""Noise models: adaptive precision posterior + probit augmentation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.noise import (AdaptiveGaussian, FixedGaussian,
+                              ProbitNoise, _truncnorm)
+
+
+def test_fixed_gaussian_identity():
+    n = FixedGaussian(7.5)
+    st = n.init()
+    assert float(st["alpha"]) == 7.5
+    vals = jnp.ones((3, 4))
+    out, alpha = n.augment(jax.random.PRNGKey(0), st, None, vals, vals)
+    assert out is vals and float(alpha) == 7.5
+
+
+def test_adaptive_gaussian_finds_precision():
+    """alpha posterior concentrates at 1/sigma^2 of the residuals."""
+    rng = np.random.default_rng(0)
+    sigma = 0.5
+    resid = sigma * rng.normal(size=(200, 300)).astype(np.float32)
+    vals = jnp.asarray(resid)           # pred = 0
+    pred = jnp.zeros_like(vals)
+    mask = jnp.ones_like(vals)
+    n = AdaptiveGaussian()
+    st = n.init()
+    alphas = []
+    for i in range(20):
+        st = n.sample_state(jax.random.PRNGKey(i), st, pred, vals, mask)
+        alphas.append(float(st["alpha"]))
+    est = np.mean(alphas)
+    assert abs(est - 1 / sigma**2) / (1 / sigma**2) < 0.05, est
+
+
+def test_adaptive_gaussian_respects_mask():
+    vals = jnp.asarray([[100.0, 0.1], [100.0, -0.1]])
+    pred = jnp.zeros((2, 2))
+    mask = jnp.asarray([[0.0, 1.0], [0.0, 1.0]])   # ignore the 100s
+    n = AdaptiveGaussian()
+    st = n.init()
+    st = n.sample_state(jax.random.PRNGKey(0), st, pred, vals, mask)
+    assert float(st["alpha"]) > 1.0    # small residuals -> high precision
+
+
+def test_truncnorm_signs():
+    key = jax.random.PRNGKey(0)
+    mean = jnp.zeros((10000,))
+    pos = jnp.ones_like(mean)
+    z = _truncnorm(key, mean, pos)
+    assert float((z > 0).mean()) == 1.0
+    z2 = _truncnorm(key, mean, jnp.zeros_like(mean))
+    assert float((z2 < 0).mean()) == 1.0
+
+
+def test_truncnorm_moments():
+    """Half-normal mean = sqrt(2/pi)."""
+    key = jax.random.PRNGKey(1)
+    z = _truncnorm(key, jnp.zeros((200000,)), jnp.ones((200000,)))
+    np.testing.assert_allclose(float(z.mean()), np.sqrt(2 / np.pi),
+                               rtol=0.02)
+
+
+def test_truncnorm_extreme_means_finite():
+    key = jax.random.PRNGKey(2)
+    mean = jnp.asarray([-12.0, 12.0, -6.0, 6.0])
+    z = _truncnorm(key, mean, jnp.asarray([1.0, 0.0, 1.0, 0.0]))
+    assert bool(jnp.isfinite(z).all())
+
+
+def test_probit_augment():
+    n = ProbitNoise()
+    st = n.init()
+    key = jax.random.PRNGKey(3)
+    pred = jnp.zeros((50, 50))
+    vals = (jax.random.uniform(key, (50, 50)) > 0.5).astype(jnp.float32)
+    mask = jnp.ones_like(vals)
+    z, alpha = n.augment(key, st, pred, vals, mask)
+    assert float(alpha) == 1.0
+    pos = np.asarray(vals) > 0.5
+    zn = np.asarray(z)
+    assert (zn[pos] > 0).all()
+    assert (zn[~pos] < 0).all()

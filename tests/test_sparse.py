@@ -1,0 +1,129 @@
+"""Padded-bucket sparse matrix: round-trips + invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_coo, from_dense
+from repro.core.sparse import gather_predict
+
+
+def _random_coo(rng, n, m, nnz):
+    flat = rng.choice(n * m, size=nnz, replace=False)
+    i, j = np.divmod(flat, m)
+    v = rng.normal(size=nnz).astype(np.float32)
+    return i.astype(np.int64), j.astype(np.int64), v
+
+
+def test_from_coo_roundtrip():
+    rng = np.random.default_rng(0)
+    i, j, v = _random_coo(rng, 50, 30, 200)
+    mat = from_coo(i, j, v, (50, 30))
+    assert mat.shape == (50, 30)
+    assert float(mat.nnz) == 200
+    # dense reconstruction from the row orientation
+    dense = np.zeros((50, 30), np.float32)
+    ridx = np.asarray(mat.rows.idx)
+    rval = np.asarray(mat.rows.val)
+    rmask = np.asarray(mat.rows.mask)
+    for r in range(50):
+        for t in range(mat.rows.max_nnz):
+            if rmask[r, t]:
+                dense[r, ridx[r, t]] = rval[r, t]
+    expect = np.zeros((50, 30), np.float32)
+    expect[i, j] = v
+    np.testing.assert_allclose(dense, expect)
+    # col orientation agrees
+    dense_c = np.zeros((50, 30), np.float32)
+    cidx = np.asarray(mat.cols.idx)
+    cval = np.asarray(mat.cols.val)
+    cmask = np.asarray(mat.cols.mask)
+    for c in range(30):
+        for t in range(mat.cols.max_nnz):
+            if cmask[c, t]:
+                dense_c[cidx[c, t], c] = cval[c, t]
+    np.testing.assert_allclose(dense_c, expect)
+
+
+def test_transpose():
+    rng = np.random.default_rng(1)
+    i, j, v = _random_coo(rng, 20, 40, 100)
+    mat = from_coo(i, j, v, (20, 40))
+    t = mat.transpose()
+    assert t.shape == (40, 20)
+    assert t.rows.max_nnz == mat.cols.max_nnz
+    np.testing.assert_allclose(np.asarray(t.rows.val),
+                               np.asarray(mat.cols.val))
+
+
+def test_with_coo_values_rebuilds_both_orientations():
+    rng = np.random.default_rng(2)
+    i, j, v = _random_coo(rng, 25, 15, 80)
+    mat = from_coo(i, j, v, (25, 15))
+    new_v = rng.normal(size=mat.coo_v.shape).astype(np.float32)
+    m2 = mat.with_coo_values(jnp.asarray(new_v))
+    # check a handful of entries in both orientations
+    expect = np.zeros((25, 15), np.float32)
+    expect[i, j] = (new_v * np.asarray(mat.coo_mask))[:len(i)]
+    got_r = np.zeros_like(expect)
+    ridx, rval, rmask = (np.asarray(m2.rows.idx), np.asarray(m2.rows.val),
+                         np.asarray(m2.rows.mask))
+    for r in range(25):
+        for t in range(m2.rows.max_nnz):
+            if rmask[r, t]:
+                got_r[r, ridx[r, t]] = rval[r, t]
+    np.testing.assert_allclose(got_r, expect)
+    got_c = np.zeros_like(expect)
+    cidx, cval, cmask = (np.asarray(m2.cols.idx), np.asarray(m2.cols.val),
+                         np.asarray(m2.cols.mask))
+    for c in range(15):
+        for t in range(m2.cols.max_nnz):
+            if cmask[c, t]:
+                got_c[cidx[c, t], c] = cval[c, t]
+    np.testing.assert_allclose(got_c, expect)
+
+
+def test_from_dense_keep_zeros_vs_not():
+    R = np.array([[1.0, 0.0], [0.0, 2.0]], np.float32)
+    sparse = from_dense(R)                      # zeros are unknowns
+    dense = from_dense(R, keep_zeros=True)      # zeros are data
+    assert float(sparse.nnz) == 2
+    assert float(dense.nnz) == 4
+
+
+def test_row_too_wide_raises():
+    i = np.zeros(10, np.int64)          # all in row 0
+    j = np.arange(10, dtype=np.int64)
+    v = np.ones(10, np.float32)
+    with pytest.raises(ValueError):
+        from_coo(i, j, v, (4, 16), max_nnz_row=4)
+
+
+def test_gather_predict():
+    rng = np.random.default_rng(3)
+    U = jnp.asarray(rng.normal(size=(10, 4)).astype(np.float32))
+    V = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+    i = jnp.asarray([0, 3, 9])
+    j = jnp.asarray([1, 1, 7])
+    out = gather_predict(U, V, i, j)
+    expect = np.einsum("ek,ek->e", np.asarray(U)[np.asarray(i)],
+                       np.asarray(V)[np.asarray(j)])
+    np.testing.assert_allclose(out, expect, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 30), st.integers(2, 30), st.integers(0, 2**31 - 1),
+       st.integers(1, 16))
+def test_padding_round_to_invariance(n, m, seed, round_to):
+    """The padded width never changes values, only layout."""
+    rng = np.random.default_rng(seed)
+    nnz = min(n * m - 1, max(1, (n * m) // 3))
+    i, j, v = _random_coo(rng, n, m, nnz)
+    a = from_coo(i, j, v, (n, m), round_to=1)
+    b = from_coo(i, j, v, (n, m), round_to=round_to)
+    assert float(a.nnz) == float(b.nnz) == nnz
+    assert b.rows.max_nnz % round_to == 0
+    # row sums are layout-independent
+    np.testing.assert_allclose(
+        np.asarray((a.rows.val * a.rows.mask).sum(axis=1)),
+        np.asarray((b.rows.val * b.rows.mask).sum(axis=1)), rtol=1e-6)
