@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.lax.linalg import cholesky, triangular_solve
 
+from .. import compat
 from ..kernels import ops
 from .blocks import DenseBlock, ModelDef
 from .noise import ProbitNoise
@@ -112,13 +113,32 @@ def _dense_contrib(blk: DenseBlock, as_row: bool, fixed: jnp.ndarray,
 # factor conditionals
 # ---------------------------------------------------------------------------
 
-def _sample_normal_factor(key, gram_shared, gram_rows, rhs, Lam_p, b_p):
+def row_normals(key, n_rows: int, num_latent: int, row_offset=0):
+    """(n_rows, K) standard normals drawn row-by-row, counter-based.
+
+    Row i's draw comes from ``fold_in(key, row_offset + i)`` — a pure
+    function of the sweep key and the row's GLOBAL index, never of the
+    batch shape.  A shard holding rows [off, off + n) therefore draws
+    exactly the bits the single-device sweep draws for those rows,
+    which is what makes the distributed chain bit-compatible with the
+    reference chain (and elastic re-meshes safe).
+    """
+    rows = row_offset + jnp.arange(n_rows)
+    keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(rows)
+    return jax.vmap(
+        lambda k: jax.random.normal(k, (num_latent,), jnp.float32))(keys)
+
+
+def _sample_normal_factor(key, gram_shared, gram_rows, rhs, Lam_p, b_p,
+                          row_offset=0):
     """u_i ~ N(Lam_i^{-1} b_i, Lam_i^{-1}) batched over rows.
 
     gram_shared (K,K) and/or gram_rows (N,K,K); rhs (N,K); Lam_p (K,K);
-    b_p (K,) or (N,K).
+    b_p (K,) or (N,K).  ``row_offset`` is the global index of row 0 —
+    nonzero on row shards of the distributed sweep.
     """
     b = rhs + b_p if b_p.ndim == 2 else rhs + b_p[None, :]
+    z = row_normals(key, b.shape[0], b.shape[1], row_offset)
     if gram_rows is None:
         # one shared precision -> one Cholesky, matrix solves
         Lam = gram_shared + Lam_p                            # (K,K)
@@ -126,7 +146,6 @@ def _sample_normal_factor(key, gram_shared, gram_rows, rhs, Lam_p, b_p):
         y = triangular_solve(L, b.T, left_side=True, lower=True)
         mean = triangular_solve(L, y, left_side=True, lower=True,
                                 transpose_a=True).T          # (N,K)
-        z = jax.random.normal(key, mean.shape, jnp.float32)
         dz = triangular_solve(L, z.T, left_side=True, lower=True,
                               transpose_a=True).T
         return mean + dz
@@ -134,7 +153,6 @@ def _sample_normal_factor(key, gram_shared, gram_rows, rhs, Lam_p, b_p):
         if gram_shared is not None else gram_rows + Lam_p[None, :, :]
     L = cholesky(Lam)                                        # (N,K,K)
     mean = chol_solve(L, b)
-    z = jax.random.normal(key, mean.shape, jnp.float32)
     dz = triangular_solve(L, z[..., None], left_side=True, lower=True,
                           transpose_a=True)[..., 0]
     return mean + dz
@@ -234,7 +252,7 @@ def _gather_view(model: ModelDef, factors):
     if not model.bf16_gather:
         return factors
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     axes = () if mesh is None else tuple(
         a for a in ("pod", "data", "model") if a in mesh.axis_names)
     n = 1
@@ -253,11 +271,11 @@ def _gather_view(model: ModelDef, factors):
             return jax.lax.all_gather(x.astype(jnp.bfloat16), axes,
                                       axis=0, tiled=True)
 
-        return jax.shard_map(
+        return compat.shard_map(
             body, mesh=mesh,
             in_specs=jax.sharding.PartitionSpec(axes),
             out_specs=jax.sharding.PartitionSpec(),
-            check_vma=False)(f)
+            check=False)(f)
 
     return tuple(cast(f) for f in factors)
 

@@ -33,7 +33,8 @@ class FixedGaussian:
     def init(self):
         return {"alpha": jnp.asarray(self.precision, jnp.float32)}
 
-    def sample_state(self, key, state, pred, vals, mask):
+    def sample_state(self, key, state, pred, vals, mask,
+                     sse=None, nnz=None):
         return state
 
     def augment(self, key, state, pred, vals, mask):
@@ -56,10 +57,16 @@ class AdaptiveGaussian:
     def init(self):
         return {"alpha": jnp.asarray(self.sn_init, jnp.float32)}
 
-    def sample_state(self, key, state, pred, vals, mask):
-        resid = (vals - pred) * mask
-        sse = jnp.sum(resid * resid)
-        nnz = jnp.sum(mask)
+    def sample_state(self, key, state, pred, vals, mask,
+                     sse=None, nnz=None):
+        """``sse``/``nnz`` override the local residual sums — the
+        distributed sweep psums them over shards first, so every shard
+        draws the same alpha from the same (replicated) key."""
+        if sse is None:
+            resid = (vals - pred) * mask
+            sse = jnp.sum(resid * resid)
+        if nnz is None:
+            nnz = jnp.sum(mask)
         a_post = self.a0 + 0.5 * nnz
         b_post = self.b0 + 0.5 * sse
         alpha = jax.random.gamma(key, a_post) / b_post
@@ -101,7 +108,8 @@ class ProbitNoise:
     def init(self):
         return {"alpha": jnp.asarray(1.0, jnp.float32)}
 
-    def sample_state(self, key, state, pred, vals, mask):
+    def sample_state(self, key, state, pred, vals, mask,
+                     sse=None, nnz=None):
         return state
 
     def augment(self, key, state, pred, vals, mask):

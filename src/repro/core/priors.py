@@ -99,13 +99,26 @@ class NormalPrior:
         ``F_sum``/``F_cov``/``n_rows`` override the locally computed
         moments — the distributed path psums them across shards first.
         """
-        K = self.num_latent
-        N = jnp.asarray(F.shape[0] if n_rows is None else n_rows,
-                        jnp.float32)
         s = F.sum(axis=0) if F_sum is None else F_sum
-        fbar = s / N
+        C = F.T @ F if F_cov is None else F_cov
+        N = F.shape[0] if n_rows is None else n_rows
+        return self.sample_hyper_moments(key, hyper, F_sum=s, F_cov=C,
+                                         n_rows=N)
+
+    def sample_hyper_moments(self, key, hyper, *, F_sum: jnp.ndarray,
+                             F_cov: jnp.ndarray, n_rows):
+        """NW update from sufficient statistics only.
+
+        ``F_sum`` (K,) and ``F_cov`` = F^T F (K, K) are the moments of
+        the factor matrix; the distributed sweep computes them as a
+        K/K^2-sized ``psum`` over row shards, so the hyper-sample is an
+        identical replicated computation on every device.
+        """
+        K = self.num_latent
+        N = jnp.asarray(n_rows, jnp.float32)
+        fbar = F_sum / N
         # scatter matrix sum_i (f_i - fbar)(f_i - fbar)^T
-        SS = (F.T @ F if F_cov is None else F_cov) - N * jnp.outer(fbar, fbar)
+        SS = F_cov - N * jnp.outer(fbar, fbar)
 
         mu0 = jnp.full((K,), self.mu0, jnp.float32)
         b_star = self.b0 + N
@@ -202,19 +215,38 @@ class MacauPrior:
         (static, may be psummed by the distributed caller).
         """
         assert side is not None
-        k_nw, k_b, k_prec = jax.random.split(key, 3)
         U_centered = F - side @ hyper["beta"]
-        h = self._normal.sample_hyper(k_nw, U_centered, hyper, **mom)
+        stats = dict(
+            F_sum=mom.get("F_sum", U_centered.sum(axis=0)),
+            F_cov=mom.get("F_cov", U_centered.T @ U_centered),
+            n_rows=mom.get("n_rows", F.shape[0]),
+            StF=mom.get("StF", side.T @ F),
+            s_side=mom.get("s_side", side.sum(axis=0)),
+            FtF=side.T @ side if FtF is None else FtF,
+        )
+        return self.sample_hyper_moments(key, hyper, **stats)
+
+    def sample_hyper_moments(self, key, hyper, *, F_sum, F_cov, n_rows,
+                             StF, s_side, FtF):
+        """Macau hyper-sample from sufficient statistics only.
+
+        ``F_sum``/``F_cov`` are the moments of the *centered* factor
+        U - side @ beta; ``StF`` = side^T U (D, K), ``s_side`` =
+        column sums of side (D,), ``FtF`` = side^T side (D, D).  The
+        distributed sweep psums each of these over row shards; the rest
+        of the update is replicated K/D-sized linear algebra.
+        """
+        k_nw, k_b, k_prec = jax.random.split(key, 3)
+        h = self._normal.sample_hyper_moments(k_nw, hyper, F_sum=F_sum,
+                                              F_cov=F_cov, n_rows=n_rows)
 
         # beta | U, Lambda  ~ MN(mean, A^{-1}, Lambda^{-1}),
         # A = side^T side + beta_prec * I
         D, K = self.num_features, self.num_latent
-        if FtF is None:
-            FtF = side.T @ side
-        Ut = F - h["mu"][None, :]
         A = FtF + hyper["beta_prec"] * jnp.eye(D, dtype=jnp.float32)
         La = cholesky(A)
-        FtU = side.T @ Ut                       # (D, K)
+        # side^T (U - mu 1^T) decomposed so shards only contribute sums
+        FtU = StF - jnp.outer(s_side, h["mu"])  # (D, K)
         y = triangular_solve(La, FtU, left_side=True, lower=True)
         mean_b = triangular_solve(La, y, left_side=True, lower=True,
                                   transpose_a=True)

@@ -33,9 +33,10 @@ from pathlib import Path
 
 import jax
 
+from .. import compat
 from ..configs import ARCHS, SHAPES, applicable, get_config, shape_by_name
 from ..optim import AdamWConfig
-from .hlo_cost import analyze as hlo_analyze
+from .hlo_cost import analyze as hlo_analyze, xla_cost_analysis
 from .mesh import make_production_mesh
 from .roofline import roofline_terms
 from . import specs as S
@@ -67,7 +68,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, n_micro: int = 1,
         return {"arch": arch, "shape": shape_name, "skipped": skip}
 
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         if shape.kind == "train":
             nm = max(n_micro, _default_micro(arch))
             step, (ps, os_, bsh) = make_sharded_train_step(
@@ -93,7 +94,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, n_micro: int = 1,
         t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)      # list-vs-dict normalized
     # trip-count-aware analysis (XLA's cost_analysis counts while/scan
     # bodies once — see hlo_cost.py); XLA numbers kept for cross-check
     hc = hlo_analyze(compiled.as_text())

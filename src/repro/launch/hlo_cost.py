@@ -27,6 +27,19 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
+from .. import compat
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """XLA's own per-device cost table for a compiled artifact.
+
+    Normalized through ``compat.cost_analysis`` (JAX 0.4.x returns a
+    one-element list, newer JAX a dict) so callers never branch on the
+    JAX version.  Kept here, next to the trip-count-aware analyzer it
+    cross-checks.
+    """
+    return compat.cost_analysis(compiled)
+
 _DTYPE_BYTES = {
     "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
     "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,

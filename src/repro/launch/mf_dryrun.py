@@ -20,7 +20,13 @@ Variants:
     baseline      row-sharded factors, f32 fixed-factor all-gather
                   (the GASPI communication pattern, Vander Aa 2017)
     bf16gather    fixed factor cast to bf16 *before* the all-gather
-                  (halves the dominant collective payload)
+                  (halves the dominant collective payload on targets
+                  with native bf16 collectives, i.e. TPU; XLA:CPU —
+                  this container — normalizes the collective back to
+                  convert-gather-convert, so the recorded
+                  collective_bytes do NOT drop here.  The bf16
+                  exchange is pinned on the lowered StableHLO in
+                  tests/test_distributed.py instead.)
 
 Usage:
     PYTHONPATH=src python -m repro.launch.mf_dryrun [--cell bmf_chembl]
@@ -123,28 +129,27 @@ def mf_model_flops(cell: MFCell, n_chips: int) -> float:
 
 
 def lower_cell(cell: MFCell, mesh, variant: str):
-    from ..core.distributed import (data_shardings, replicated,
-                                    state_shardings)
-    from ..core.gibbs import gibbs_step, init_state
+    from ..core.distributed import (distributed_supported,
+                                    make_distributed_step)
+    from ..core.gibbs import init_state
     from .hlo_cost import analyze as hlo_analyze
     from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS
-    from functools import partial
 
     model = build_model(cell, variant)
     data = abstract_data(cell)
     state = jax.eval_shape(lambda: init_state(model, data, 0))
 
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
-        ss = state_shardings(model, mesh, state)
-        ds = data_shardings(model, mesh, data)
-        step = jax.jit(partial(gibbs_step, model),
-                       in_shardings=(ds, ss),
-                       out_shardings=(ss, replicated(mesh)))
-        lowered = step.lower(data, state)
-        t_lower = time.perf_counter() - t0
-        compiled = lowered.compile()
-        t_compile = time.perf_counter() - t0 - t_lower
+    # explicit shard_map sweep (one fixed-factor all-gather per
+    # half-sweep + K/K^2 moment psums); production cells are always in
+    # the sharded subset — assert rather than silently fall back to the
+    # auto-partitioned path whose collectives we are here to measure.
+    assert distributed_supported(model, mesh, data), cell.name
+    step, ds, ss = make_distributed_step(model, mesh, data, state)
+    lowered = step.lower(data, state)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     hc = hlo_analyze(compiled.as_text())

@@ -1,8 +1,10 @@
 """Roofline terms from the compiled dry-run artifact.
 
 This container is CPU-only, so nothing is *measured*: all three terms
-are derived from ``compiled.cost_analysis()`` (FLOPs, bytes accessed)
-plus an HLO-text parse that sums the operand bytes of every collective.
+are derived from XLA's compiled-artifact cost table (via
+``hlo_cost.xla_cost_analysis`` / ``compat.cost_analysis`` — the raw
+``compiled.cost_analysis()`` return type is version-dependent) plus an
+HLO-text parse that sums the operand bytes of every collective.
 XLA reports the cost of the *per-device* SPMD module (verified in
 ``tests/test_roofline.py``: a jit over N devices reports ~1/N of the
 global matmul FLOPs), so each term divides by per-chip peaks directly:

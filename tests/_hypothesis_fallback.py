@@ -1,0 +1,92 @@
+"""Minimal stand-in for the ``hypothesis`` API the suite uses.
+
+The container image does not ship hypothesis (see requirements-dev.txt
+for the real pin).  Rather than skip three whole test modules, this
+shim implements just enough of the surface — ``given``, ``settings``,
+``strategies.integers/booleans/composite`` — to run each property test
+over a deterministic sample of the strategy space: the all-minimum
+point, the all-maximum point, then seeded pseudo-random draws up to
+``max_examples``.
+
+No shrinking, no database, no health checks — if a property fails
+here, rerun under real hypothesis for a minimal counterexample.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import numpy as np
+
+
+class _Strategy:
+    """A value source: ``sample(rng, mode)`` with mode in
+    {"min", "max", "random"}."""
+
+    def __init__(self, fn: Callable[[np.random.Generator, str], Any]):
+        self._fn = fn
+
+    def sample(self, rng: np.random.Generator, mode: str) -> Any:
+        return self._fn(rng, mode)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        def draw(rng, mode):
+            if mode == "min":
+                return int(min_value)
+            if mode == "max":
+                return int(max_value)
+            return int(rng.integers(min_value, max_value + 1))
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng, mode: {"min": False, "max": True}
+                         .get(mode, bool(rng.integers(0, 2))))
+
+    @staticmethod
+    def composite(fn):
+        """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy
+        factory, with ``draw`` resolving sub-strategies in sequence."""
+        @functools.wraps(fn)
+        def factory(*args, **kwargs):
+            def sample(rng, mode):
+                return fn(lambda strat: strat.sample(rng, mode),
+                          *args, **kwargs)
+            return _Strategy(sample)
+        return factory
+
+
+strategies = _Strategies()
+
+
+def given(*strats: _Strategy):
+    def deco(test_fn):
+        # zero-arg wrapper: unlike real hypothesis we don't support
+        # mixing pytest fixtures into the signature, and exposing the
+        # original parameters would make pytest resolve them as
+        # fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = np.random.default_rng(0xC0FFEE)
+            for i in range(n):
+                mode = "min" if i == 0 else "max" if i == 1 else "random"
+                drawn = [s.sample(rng, mode) for s in strats]
+                test_fn(*drawn)
+        wrapper.__name__ = test_fn.__name__
+        wrapper.__doc__ = test_fn.__doc__
+        wrapper.__module__ = test_fn.__module__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = 20, **_ignored):
+    """Accepts (and mostly ignores) real-hypothesis knobs like
+    ``deadline``."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

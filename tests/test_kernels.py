@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container without dev deps — see requirements-dev.txt
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.gram import gram_pallas

@@ -10,12 +10,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.models import sharding as shd
 from repro.models.layers import chunked_attention
 
 
 def _mesh():
-    return jax.sharding.AbstractMesh((1, 1), ("data", "model"))
+    return compat.abstract_mesh((1, 1), ("data", "model"))
 
 
 def test_policy_flags_parse_compound():
@@ -37,7 +38,7 @@ def test_dponly_expands_dp_over_model_axis():
 
 
 def test_ep_requires_divisible_expert_count():
-    mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+    mesh = compat.abstract_mesh((1, 2), ("data", "model"))
     shape_ok = (4, 8, 16)       # 4 experts % 2 == 0
     shape_bad = (3, 8, 16)      # 3 experts % 2 != 0
     with shd.policy("ep"):

@@ -16,7 +16,10 @@ Invariants covered:
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container without dev deps — see requirements-dev.txt
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (AdaptiveGaussian, BlockDef, EntityDef,
                         FixedGaussian, MFData, ModelDef, NormalPrior,

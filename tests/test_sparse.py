@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # container without dev deps — see requirements-dev.txt
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import from_coo, from_dense
 from repro.core.sparse import gather_predict
