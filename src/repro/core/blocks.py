@@ -36,18 +36,33 @@ class DenseBlock:
     ``fully`` (static) marks every cell observed ("dense-dense" /
     "sparse fully known" in the paper's taxonomy) which lets the factor
     update share one Gram matrix across all rows.
+
+    Both orientations are stored (``X``/``mask`` row-major for the
+    row-entity half-sweep, ``XT``/``maskT`` for the column-entity one),
+    mirroring ``SparseMatrix.rows``/``cols``: each half-sweep reads its
+    operand along axis 0, so BOTH leading axes can be row-sharded by
+    the distributed layer and a shard never needs the transpose of
+    another shard's slice.
     """
 
     X: jnp.ndarray              # (n_rows, n_cols) f32
     mask: jnp.ndarray           # (n_rows, n_cols) f32; ones when fully
+    XT: jnp.ndarray             # (n_cols, n_rows) f32 == X.T
+    maskT: jnp.ndarray          # (n_cols, n_rows) f32 == mask.T
     fully: bool
 
     def tree_flatten(self):
-        return (self.X, self.mask), (self.fully,)
+        return (self.X, self.mask, self.XT, self.maskT), (self.fully,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, fully=aux[0])
+
+    def oriented(self, as_row: bool):
+        """(values, mask) with the updating entity along axis 0."""
+        if as_row:
+            return self.X, self.mask
+        return self.XT, self.maskT
 
     @property
     def shape(self):
@@ -62,8 +77,10 @@ def dense_block(X: np.ndarray, mask: Optional[np.ndarray] = None
                 ) -> DenseBlock:
     X = jnp.asarray(X, jnp.float32)
     if mask is None:
-        return DenseBlock(X, jnp.ones_like(X), fully=True)
-    return DenseBlock(X, jnp.asarray(mask, jnp.float32), fully=False)
+        ones = jnp.ones_like(X)
+        return DenseBlock(X, ones, X.T, ones.T, fully=True)
+    mask = jnp.asarray(mask, jnp.float32)
+    return DenseBlock(X, mask, X.T, mask.T, fully=False)
 
 
 @dataclasses.dataclass(frozen=True)

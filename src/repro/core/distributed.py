@@ -18,20 +18,35 @@ over the production mesh (``compat.shard_map`` — version-portable):
   reduce over the row shards with K- and K^2-sized ``psum`` payloads
   (D-sized for the Macau link terms) and are then resampled as an
   identical replicated computation on every shard;
-* counter-based per-row RNG (``gibbs.row_normals``) means each shard
-  draws exactly the bits the single-device sweep draws for its rows
-  (asserted bitwise in tests), so the sampled chain agrees with the
-  single-device chain up to reduction-order ULPs — psum grouping of
-  the K/K^2 moments and XLA's batch-size-dependent tiling of the
+* dense blocks shard the same way: both stored orientations
+  (``DenseBlock.X``/``XT``) are row-sharded along their leading axis,
+  and each shard's Gram/RHS contribution contracts its slice against
+  the gathered fixed factor — fully-observed blocks additionally share
+  ONE replicated (K, K) Gram across all rows;
+* probit noise rides through the same machinery because its
+  truncated-normal augmentation is per-row counter-based
+  (``gibbs.row_uniforms`` threaded through ``ProbitNoise.augment`` via
+  ``row_offset``) — the compound-activity classification workload of
+  the paper runs the explicit sweep, not the pjit fallback;
+* the Macau side-Gramian ``FtF = side^T side`` is STATIC data: it is
+  computed once at ``make_distributed_step`` placement time and passed
+  in replicated, so the per-sweep hyper path carries no (D, D) psum;
+* counter-based per-row RNG (``gibbs.row_normals`` for the factor
+  draws, ``gibbs.row_uniforms`` for the probit latents) means each
+  shard draws exactly the bits the single-device sweep draws for its
+  rows (asserted bitwise in tests), so the sampled chain agrees with
+  the single-device chain up to reduction-order ULPs — psum grouping
+  of the K/K^2 moments and XLA's batch-size-dependent tiling of the
   per-row solves; measured ~1e-5 after 3 sweeps, asserted at 2e-4 —
   which is what makes elastic restart onto a different mesh safe.
   Verified against the single-device chain on 8 simulated CPU devices
-  in ``tests/test_distributed.py``.
+  in ``tests/test_distributed.py`` (Gaussian, probit, and dense-block
+  models) and through an on-disk checkpoint + shrunk-mesh restore in
+  ``tests/test_elastic.py``.
 
-Models outside the sharded subset (dense blocks, probit noise,
-spike-and-slab priors, row counts that do not divide the mesh) fall
-back to auto-sharded pjit over the same shardings — slower collectives,
-same results.
+Models outside the sharded subset (spike-and-slab priors, self-blocks,
+row counts that do not divide the mesh) fall back to auto-sharded pjit
+over the same shardings — slower collectives, same results.
 
 ``FACTOR_AXES`` flattens ("pod", "data", "model") — MF has no tensor
 axis worth model-parallelism (K is tiny), so every chip takes a row
@@ -48,10 +63,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import compat
-from .blocks import ModelDef
-from .gibbs import (MFData, MFState, _sample_normal_factor,
-                    _sparse_contrib, gibbs_step)
-from .noise import AdaptiveGaussian, FixedGaussian
+from .blocks import DenseBlock, ModelDef
+from .gibbs import (MFData, MFState, _dense_contrib,
+                    _sample_normal_factor, _sparse_contrib, gibbs_step)
+from .noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
 from .priors import FixedNormalPrior, MacauPrior, NormalPrior
 
 FACTOR_AXES = ("pod", "data", "model")
@@ -134,10 +149,14 @@ def distributed_supported(model: ModelDef, mesh: Mesh,
     moment algebra ``_sharded_sweep`` implements are admitted — a new
     prior whose ``sample_hyper`` reads the factor matrix would
     otherwise silently sample per-shard-divergent hypers (out_specs
-    P() with check off never validates replication).  Outside the
-    subset (dense blocks, probit latent draws whose shape follows the
-    shard, spike-and-slab coordinate descent, non-dividing row counts)
-    ``make_distributed_step`` falls back to pjit.
+    P() with check off never validates replication).  The subset now
+    spans sparse AND dense blocks under Gaussian, adaptive-Gaussian,
+    and probit noise (probit's truncated-normal draws are per-row
+    counter-based, so shard draws slice the single-device chain).
+    Outside it (spike-and-slab coordinate descent, self-blocks,
+    non-dividing row counts, dense payloads without the stored
+    transposed orientation) ``make_distributed_step`` falls back to
+    pjit.
     """
     S = _n_shards(mesh)
     for e, ent in enumerate(model.entities):
@@ -149,11 +168,18 @@ def distributed_supported(model: ModelDef, mesh: Mesh,
         if isinstance(ent.prior, MacauPrior) and (
                 data is None or data.sides[e] is None):
             return False
-    for blk in model.blocks:
-        if not blk.sparse or blk.row_entity == blk.col_entity:
+    for bi, blk in enumerate(model.blocks):
+        if blk.row_entity == blk.col_entity:
             return False
-        if not isinstance(blk.noise, (FixedGaussian, AdaptiveGaussian)):
+        if not isinstance(blk.noise,
+                          (FixedGaussian, AdaptiveGaussian, ProbitNoise)):
             return False
+        if not blk.sparse and data is not None:
+            payload = data.blocks[bi]
+            # both orientations must be stored for per-shard reads
+            if not isinstance(payload, DenseBlock) \
+                    or getattr(payload, "XT", None) is None:
+                return False
     return True
 
 
@@ -171,12 +197,15 @@ def _shard_index(axes: Tuple[str, ...], sizes: Tuple[int, ...]):
     return idx
 
 
-def _psum_hyper(model: ModelDef, e: int, key, u, hyper, side, axes):
+def _psum_hyper(model: ModelDef, e: int, key, u, hyper, side, axes,
+                ftf=None):
     """Hyper-sample from psummed moments — replicated-identical output.
 
     The collective payloads are K (factor sum), K^2 (factor Gramian)
-    and, for Macau link terms, D/DxK/DxD — negligible next to the
-    factor all-gathers.
+    and, for Macau link terms, D/DxK — negligible next to the factor
+    all-gathers.  The Macau (D, D) side-Gramian ``ftf`` is NOT psummed
+    here: it is static data, computed once at placement time in
+    ``make_distributed_step`` and passed in replicated.
     """
     prior = model.entities[e].prior
     N = model.entities[e].n_rows
@@ -187,7 +216,7 @@ def _psum_hyper(model: ModelDef, e: int, key, u, hyper, side, axes):
             key, hyper,
             F_sum=psum(Uc.sum(axis=0)), F_cov=psum(Uc.T @ Uc), n_rows=N,
             StF=psum(side.T @ u), s_side=psum(side.sum(axis=0)),
-            FtF=psum(side.T @ side))
+            FtF=ftf)
     if isinstance(prior, NormalPrior):
         return prior.sample_hyper_moments(
             key, hyper, F_sum=psum(u.sum(axis=0)), F_cov=psum(u.T @ u),
@@ -197,14 +226,18 @@ def _psum_hyper(model: ModelDef, e: int, key, u, hyper, side, axes):
 
 
 def _sharded_sweep(model: ModelDef, axes: Tuple[str, ...],
-                   sizes: Tuple[int, ...], data: MFData, state: MFState):
+                   sizes: Tuple[int, ...], ftf, data: MFData,
+                   state: MFState):
     """One full Gibbs sweep, executed per-shard inside shard_map.
 
     Mirrors ``gibbs.gibbs_step`` exactly — same key-splitting sequence,
     same per-row draws (offset by the shard's global row origin), same
-    per-block contributions — with the three global couplings made
-    explicit: one fixed-factor all-gather per half-sweep, K/K^2 psums
-    for the hyper moments, scalar psums for residual SSE/nnz.
+    per-block contributions (sparse padded-CSR or dense, Gaussian or
+    probit-augmented) — with the three global couplings made explicit:
+    one fixed-factor all-gather per half-sweep, K/K^2 psums for the
+    hyper moments, scalar psums for residual SSE/nnz.  ``ftf`` holds
+    the per-entity Macau side-Gramians, precomputed and replicated
+    (None for non-Macau entities).
     """
     S = int(np.prod(sizes))
     shard = _shard_index(axes, sizes)
@@ -241,9 +274,11 @@ def _sharded_sweep(model: ModelDef, axes: Tuple[str, ...],
         side = data.sides[e]
         k_hyp, k_fac, k_blk = jax.random.split(ekeys[e], 3)
         u = factors[e]
+        row_offset = shard * (ent.n_rows // S)
 
         # 1. hyper-parameters from psummed global moments
-        hyper = _psum_hyper(model, e, k_hyp, u, hypers[e], side, axes)
+        hyper = _psum_hyper(model, e, k_hyp, u, hypers[e], side, axes,
+                            ftf=ftf[e])
 
         # 2. this shard's factor rows from their conditional
         prior = ent.prior
@@ -253,23 +288,37 @@ def _sharded_sweep(model: ModelDef, axes: Tuple[str, ...],
         else:
             b_p = prior.mean_term(hyper, ent.n_rows)
 
+        gram_shared = None
         gram_rows = None
         rhs_acc = jnp.zeros((ent.n_rows // S, model.num_latent),
                             jnp.float32)
         bkeys = jax.random.split(k_blk, max(1, len(model.blocks)))
         for bi, as_row in model.blocks_touching(e):
             blk = model.blocks[bi]
-            g, r = _sparse_contrib(model, data.blocks[bi], as_row,
-                                   fixed_view(blk.other(e)), u,
-                                   blk.noise, noises[bi], bkeys[bi])
-            gram_rows = g if gram_rows is None else gram_rows + g
+            fixed = fixed_view(blk.other(e))
+            if blk.sparse:
+                g, r = _sparse_contrib(model, data.blocks[bi], as_row,
+                                       fixed, u, blk.noise, noises[bi],
+                                       bkeys[bi], row_offset=row_offset)
+                gram_rows = g if gram_rows is None else gram_rows + g
+            else:
+                gs, g, r = _dense_contrib(data.blocks[bi], as_row,
+                                          fixed, u, blk.noise,
+                                          noises[bi], bkeys[bi],
+                                          row_offset=row_offset)
+                if gs is not None:
+                    # fully-observed: ONE (K, K) Gram shared by every
+                    # row, built from the gathered (replicated) fixed
+                    # factor — identical on all shards by construction
+                    gram_shared = gs if gram_shared is None \
+                        else gram_shared + gs
+                if g is not None:
+                    gram_rows = g if gram_rows is None else gram_rows + g
             rhs_acc = rhs_acc + r
 
-        gram_shared = None
-        if gram_rows is None:   # entity with no observed blocks
-            gram_shared = jnp.zeros(
+        if gram_shared is None and gram_rows is None:
+            gram_shared = jnp.zeros(   # entity with no observed blocks
                 (model.num_latent, model.num_latent), jnp.float32)
-        row_offset = shard * (ent.n_rows // S)
         factors[e] = _sample_normal_factor(k_fac, gram_shared, gram_rows,
                                            rhs_acc, Lam_p, b_p,
                                            row_offset=row_offset)
@@ -286,24 +335,51 @@ def _sharded_sweep(model: ModelDef, axes: Tuple[str, ...],
     for bi, blk in enumerate(model.blocks):
         e_last = max(blk.row_entity, blk.col_entity)
         payload = data.blocks[bi]
-        padded = payload.rows if blk.row_entity == e_last else payload.cols
         fixed = gathered[blk.other(e_last)]
         v = factors[e_last]
         if model.bf16_gather:
             v = v.astype(jnp.bfloat16)
-        pred = jnp.einsum("rtk,rk->rt", fixed[padded.idx], v)
-        resid = (padded.val - pred) * padded.mask
+        if blk.sparse:
+            padded = payload.rows if blk.row_entity == e_last \
+                else payload.cols
+            vals, msk = padded.val, padded.mask
+            pred = jnp.einsum("rtk,rk->rt", fixed[padded.idx], v)
+        else:
+            vals, msk = payload.oriented(blk.row_entity == e_last)
+            pred = v @ fixed.T
+        resid = (vals - pred) * msk
         se = psum(jnp.sum(resid * resid))
-        nnz = psum(jnp.sum(padded.mask))
+        nnz = psum(jnp.sum(msk))
         noises[bi] = blk.noise.sample_state(nkeys[bi], noises[bi], pred,
-                                            padded.val, padded.mask,
-                                            sse=se, nnz=nnz)
+                                            vals, msk, sse=se, nnz=nnz)
         metrics[f"rmse_train_{bi}"] = jnp.sqrt(se / nnz)
         metrics[f"alpha_{bi}"] = noises[bi]["alpha"]
 
     new_state = MFState(key, tuple(factors), tuple(hypers), tuple(noises),
                         state.step + 1)
     return new_state, metrics
+
+
+def _macau_ftf(model: ModelDef, data: MFData):
+    """Per-entity Macau side-Gramians ``side^T side`` — STATIC data.
+
+    Computed ONCE here (placement time) so the per-sweep loop carries
+    no (D, D) psum; asserted on the HLO in tests/test_distributed.py.
+    Abstract (ShapeDtypeStruct) sides — the dry-run path, which only
+    lowers — produce abstract Gramians.
+    """
+    out = []
+    for e, ent in enumerate(model.entities):
+        side = data.sides[e]
+        if not isinstance(ent.prior, MacauPrior) or side is None:
+            out.append(None)
+        elif isinstance(side, jax.ShapeDtypeStruct):
+            D = side.shape[1]
+            out.append(jax.ShapeDtypeStruct((D, D), jnp.float32))
+        else:
+            side = jnp.asarray(side, jnp.float32)
+            out.append(side.T @ side)
+    return tuple(out)
 
 
 def make_distributed_step(model: ModelDef, mesh: Mesh, data: MFData,
@@ -316,20 +392,33 @@ def make_distributed_step(model: ModelDef, mesh: Mesh, data: MFData,
     subset (see ``distributed_supported``); otherwise jits the
     single-device ``gibbs_step`` with the same in/out shardings and
     lets the partitioner place the collectives.
+
+    ``step_fn(data, state)`` closes over the precomputed Macau
+    side-Gramians (replicated) and exposes ``.lower(data, state)``
+    exactly like a bare ``jax.jit`` result.
     """
     ss = state_shardings(model, mesh, state)
     ds = data_shardings(model, mesh, data)
     if distributed_supported(model, mesh, data):
         axes = _axes_in(mesh)
         sizes = compat.mesh_axis_sizes(mesh, axes)
+        ftf = _macau_ftf(model, data)
+        ftf_specs = jax.tree.map(lambda x: P(), ftf)
         body = compat.shard_map(
             partial(_sharded_sweep, model, axes, sizes), mesh=mesh,
-            in_specs=(data_specs(model, mesh, data),
+            in_specs=(ftf_specs,
+                      data_specs(model, mesh, data),
                       state_specs(model, mesh, state)),
             out_specs=(state_specs(model, mesh, state), P()),
             check=False)
-        fn = jax.jit(body, in_shardings=(ds, ss),
-                     out_shardings=(ss, replicated(mesh)))
+        jfn = jax.jit(body,
+                      in_shardings=(_with_mesh(mesh, ftf_specs), ds, ss),
+                      out_shardings=(ss, replicated(mesh)))
+
+        def fn(data, state):
+            return jfn(ftf, data, state)
+
+        fn.lower = lambda data, state: jfn.lower(ftf, data, state)
     else:
         fn = jax.jit(
             partial(gibbs_step, model),

@@ -71,36 +71,46 @@ def init_state(model: ModelDef, data: MFData, seed: int = 0,
 
 def _sparse_contrib(model: ModelDef, mat: SparseMatrix, as_row: bool,
                     fixed: jnp.ndarray, u_cur: jnp.ndarray,
-                    noise, nstate, key):
-    """alpha-weighted (gram, rhs) of one sparse block for one entity."""
+                    noise, nstate, key, row_offset=0):
+    """alpha-weighted (gram, rhs) of one sparse block for one entity.
+
+    ``row_offset`` is the global index of the operand's row 0 — nonzero
+    on row shards of the distributed sweep, where it keeps the probit
+    augmentation draws bitwise slices of the single-device draws.
+    """
     padded = mat.rows if as_row else mat.cols
     vg = fixed[padded.idx]                      # (R, T, K)
     if isinstance(noise, ProbitNoise):
         pred = jnp.einsum("rtk,rk->rt", vg, u_cur)
         vals, alpha = noise.augment(key, nstate, pred, padded.val,
-                                    padded.mask)
+                                    padded.mask, row_offset=row_offset)
     else:
         vals, alpha = noise.augment(key, nstate, None, padded.val,
-                                    padded.mask)
+                                    padded.mask, row_offset=row_offset)
     gram, rhs = ops.gram_and_rhs(vg, vals, padded.mask,
                                  use_pallas=model.use_pallas)
     return alpha * gram, alpha * rhs            # (R,K,K), (R,K)
 
 
-def _dense_contrib(blk: DenseBlock, as_row: bool, fixed: jnp.ndarray,
-                   u_cur: jnp.ndarray, noise, nstate, key):
+def _dense_contrib(payload: DenseBlock, as_row: bool, fixed: jnp.ndarray,
+                   u_cur: jnp.ndarray, noise, nstate, key, row_offset=0):
     """Contributions of a dense block.
 
-    Returns (gram_shared | None, gram_rows | None, rhs).
+    Returns (gram_shared | None, gram_rows | None, rhs).  Reads the
+    stored orientation (``X`` or ``XT``) rather than transposing, so
+    inside the distributed sweep a shard's slice of either orientation
+    is self-contained (see ``DenseBlock``); ``row_offset`` as in
+    ``_sparse_contrib``.
     """
-    X = blk.X if as_row else blk.X.T            # (R, C)
-    m = blk.mask if as_row else blk.mask.T
+    X, m = payload.oriented(as_row)             # (R, C)
     if isinstance(noise, ProbitNoise):
         pred = u_cur @ fixed.T
-        vals, alpha = noise.augment(key, nstate, pred, X, m)
+        vals, alpha = noise.augment(key, nstate, pred, X, m,
+                                    row_offset=row_offset)
     else:
-        vals, alpha = noise.augment(key, nstate, None, X, m)
-    if blk.fully:
+        vals, alpha = noise.augment(key, nstate, None, X, m,
+                                    row_offset=row_offset)
+    if payload.fully:
         gram_shared = alpha * (fixed.T @ fixed)             # (K, K)
         rhs = alpha * (vals @ fixed)                        # (R, K)
         return gram_shared, None, rhs
@@ -122,11 +132,36 @@ def row_normals(key, n_rows: int, num_latent: int, row_offset=0):
     exactly the bits the single-device sweep draws for those rows,
     which is what makes the distributed chain bit-compatible with the
     reference chain (and elastic re-meshes safe).
+
+    Probit's truncated-normal augmentation obeys the same contract
+    through :func:`row_uniforms` below — every stochastic per-row
+    quantity in the sweep is a counter-based function of the global
+    row index, so the whole model zoo (Gaussian AND probit, sparse AND
+    dense) re-meshes without perturbing the chain.
     """
     rows = row_offset + jnp.arange(n_rows)
     keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(rows)
     return jax.vmap(
         lambda k: jax.random.normal(k, (num_latent,), jnp.float32))(keys)
+
+
+def row_uniforms(key, n_rows: int, width: int, row_offset=0, *,
+                 minval=0.0, maxval=1.0):
+    """(n_rows, width) uniforms drawn row-by-row, counter-based.
+
+    The uniform sibling of :func:`row_normals`, with the identical
+    contract: row i's ``width`` draws come from
+    ``fold_in(key, row_offset + i)`` — a pure function of the sweep
+    key and the row's GLOBAL index, never of the batch shape.  This is
+    what ``ProbitNoise.augment`` consumes for its truncated-normal
+    latents, so probit shard draws are bitwise slices of the
+    single-device chain exactly like the factor draws above.
+    """
+    rows = row_offset + jnp.arange(n_rows)
+    keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(rows)
+    return jax.vmap(
+        lambda k: jax.random.uniform(k, (width,), jnp.float32,
+                                     minval, maxval))(keys)
 
 
 def _sample_normal_factor(key, gram_shared, gram_rows, rhs, Lam_p, b_p,
@@ -188,8 +223,7 @@ def _sample_sns_factor(model: ModelDef, data: MFData, key,
             pred = jnp.einsum("rtk,rk->rt", vg, u)
             views.append(("sp", vg, padded.val, padded.mask, pred, alpha))
         else:
-            X = payload.X if as_row else payload.X.T
-            m = payload.mask if as_row else payload.mask.T
+            X, m = payload.oriented(as_row)
             pred = u @ fixed.T
             views.append(("dn", fixed, X, m, pred, alpha))
 

@@ -37,7 +37,7 @@ class FixedGaussian:
                      sse=None, nnz=None):
         return state
 
-    def augment(self, key, state, pred, vals, mask):
+    def augment(self, key, state, pred, vals, mask, row_offset=0):
         return vals, state["alpha"]
 
 
@@ -73,8 +73,28 @@ class AdaptiveGaussian:
         return {"alpha": jnp.clip(alpha, 1e-6, self.sn_max)
                 .astype(jnp.float32)}
 
-    def augment(self, key, state, pred, vals, mask):
+    def augment(self, key, state, pred, vals, mask, row_offset=0):
         return vals, state["alpha"]
+
+
+_EPS = 1e-7
+
+
+def _truncnorm_from_u(u, mean, lower_tail: jnp.ndarray):
+    """Inverse-CDF truncated-normal transform of uniforms ``u``.
+
+    z ~ N(mean, 1) truncated to z>0 where lower_tail else z<0, with
+    u in the open interval (0, 1).  Elementwise, so a row slice of
+    (u, mean, lower_tail) yields exactly the matching slice of z —
+    which is what lets the distributed sweep draw per-shard.
+    """
+    # P(z < 0) = Phi(-mean)
+    p0 = 0.5 * (1.0 + jax.lax.erf(-mean / _SQRT2))
+    p0 = jnp.clip(p0, _EPS, 1.0 - _EPS)
+    # positive side: U ~ (p0, 1); negative side: U ~ (0, p0)
+    uu = jnp.where(lower_tail > 0, p0 + u * (1.0 - p0), u * p0)
+    z = mean + _SQRT2 * jax.lax.erf_inv(2.0 * uu - 1.0)
+    return jnp.clip(z, mean - 8.0, mean + 8.0)
 
 
 def _truncnorm(key, mean, lower_tail: jnp.ndarray):
@@ -82,16 +102,12 @@ def _truncnorm(key, mean, lower_tail: jnp.ndarray):
 
     Inverse-CDF sampling in float32 via erfinv; numerically safe for
     |mean| up to ~8 (clip keeps the CDF arguments in open (0, 1)).
+    One batch-shaped draw — the Gibbs sweep instead goes through
+    ``ProbitNoise.augment`` whose uniforms are per-row counter-based.
     """
     u = jax.random.uniform(key, mean.shape, dtype=jnp.float32,
-                           minval=1e-7, maxval=1.0 - 1e-7)
-    # P(z < 0) = Phi(-mean)
-    p0 = 0.5 * (1.0 + jax.lax.erf(-mean / _SQRT2))
-    p0 = jnp.clip(p0, 1e-7, 1.0 - 1e-7)
-    # positive side: U ~ (p0, 1); negative side: U ~ (0, p0)
-    uu = jnp.where(lower_tail > 0, p0 + u * (1.0 - p0), u * p0)
-    z = mean + _SQRT2 * jax.lax.erf_inv(2.0 * uu - 1.0)
-    return jnp.clip(z, mean - 8.0, mean + 8.0)
+                           minval=_EPS, maxval=1.0 - _EPS)
+    return _truncnorm_from_u(u, mean, lower_tail)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +117,15 @@ class ProbitNoise:
     ``augment`` replaces each observed binary value with a latent
     z ~ TruncNormal(pred, 1) whose sign matches the observation, and
     fixes the regression precision at 1.
+
+    The uniforms behind the truncated-normal draws are per-row
+    counter-based (``gibbs.row_uniforms``): row i of a (R, T) operand
+    draws from ``fold_in(key, row_offset + i)``, a pure function of
+    the sweep key and the row's GLOBAL index.  A shard holding rows
+    [off, off + n) of the padded view therefore consumes exactly the
+    uniforms the single-device sweep consumes for those rows — the
+    same contract as ``gibbs.row_normals`` — which is what admits
+    probit models into the explicit distributed sweep.
     """
 
     threshold: float = 0.5  # vals > threshold count as positive
@@ -112,7 +137,11 @@ class ProbitNoise:
                      sse=None, nnz=None):
         return state
 
-    def augment(self, key, state, pred, vals, mask):
+    def augment(self, key, state, pred, vals, mask, row_offset=0):
+        # deferred import: gibbs imports this module at load time
+        from .gibbs import row_uniforms
         pos = (vals > self.threshold).astype(jnp.float32)
-        z = _truncnorm(key, pred, pos)
+        u = row_uniforms(key, vals.shape[0], vals.shape[1], row_offset,
+                         minval=_EPS, maxval=1.0 - _EPS)
+        z = _truncnorm_from_u(u, pred, pos)
         return z * mask, state["alpha"]

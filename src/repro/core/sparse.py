@@ -109,8 +109,13 @@ class SparseMatrix:
     def with_coo_values(self, new_v: jnp.ndarray) -> "SparseMatrix":
         """Rebuild both padded orientations from new COO values.
 
-        Used by value-mutating noise models (probit latent
-        augmentation).  Padding entries carry scatter position
+        NOT the probit path: ``ProbitNoise.augment`` draws its
+        truncated-normal latents directly on the padded view it is
+        handed, per-row counter-based (``gibbs.row_uniforms``), so the
+        stored values stay the immutable binary observations and shard
+        draws slice the single-device chain.  This rebuild exists for
+        data-replacement workflows (bootstrap resampling, synthetic
+        relabeling).  Padding entries carry scatter position
         ``rows.size`` (one-past-end dump slot), so they never corrupt
         real slots.
         """

@@ -13,8 +13,18 @@ info) lowered + compiled on the 16x16 single-pod and 2x16x16 multi-pod
 meshes, with the same roofline extraction.
 
 Cells:
-    bmf_chembl    1,048,576 x 8,192, K=128, ~67M observed entries
-    macau_chembl  + 2048-bit ECFP side info on the compound axis
+    bmf_chembl     1,048,576 x 8,192, K=128, ~67M observed entries
+    macau_chembl   + 2048-bit ECFP side info on the compound axis
+                   (the side-Gramian FtF is hoisted to placement time —
+                   no per-sweep (D, D) psum)
+    probit_chembl  binary activity classification (paper §4): same
+                   shape, ProbitNoise with counter-based truncated-
+                   normal augmentation — runs the explicit sharded
+                   sweep, not the pjit fallback
+    dense_views    131,072 x 4,096 fully-observed dense block
+                   ("dense-dense" row of Table 1) through the sharded
+                   dense path (row-sharded orientations, one shared
+                   (K, K) Gram per half-sweep)
 
 Variants:
     baseline      row-sharded factors, f32 fixed-factor all-gather
@@ -59,6 +69,8 @@ class MFCell:
     col_nnz: int          # padded nonzeros per column
     nnz_pad: int          # flat COO padding
     side_feats: int = 0   # Macau fingerprints on the row axis
+    probit: bool = False  # binary data, ProbitNoise augmentation
+    dense: bool = False   # fully-observed DenseBlock payload
 
 
 CELLS = {
@@ -66,6 +78,10 @@ CELLS = {
                          1 << 26),
     "macau_chembl": MFCell("macau_chembl", 1 << 20, 8192, 128, 64, 8192,
                            1 << 26, side_feats=2048),
+    "probit_chembl": MFCell("probit_chembl", 1 << 20, 8192, 128, 64,
+                            8192, 1 << 26, probit=True),
+    "dense_views": MFCell("dense_views", 1 << 17, 4096, 128, 0, 0, 0,
+                          dense=True),
 }
 
 
@@ -75,8 +91,16 @@ def _sds(shape, dtype):
 
 def abstract_data(cell: MFCell):
     """MFData of ShapeDtypeStructs at full production size."""
+    from ..core.blocks import DenseBlock
     from ..core.sparse import PaddedRows, SparseMatrix
     from ..core.gibbs import MFData
+
+    if cell.dense:
+        R, C = cell.n_rows, cell.n_cols
+        blk = DenseBlock(_sds((R, C), F32), _sds((R, C), F32),
+                         _sds((C, R), F32), _sds((C, R), F32),
+                         fully=True)
+        return MFData((blk,), (None, None))
 
     rows = PaddedRows(_sds((cell.n_rows, cell.row_nnz), I32),
                       _sds((cell.n_rows, cell.row_nnz), F32),
@@ -98,14 +122,15 @@ def abstract_data(cell: MFCell):
 
 def build_model(cell: MFCell, variant: str):
     from ..core.blocks import BlockDef, EntityDef, ModelDef
-    from ..core.noise import AdaptiveGaussian
+    from ..core.noise import AdaptiveGaussian, ProbitNoise
     from ..core.priors import MacauPrior, NormalPrior
     rp = MacauPrior(cell.K, cell.side_feats) if cell.side_feats \
         else NormalPrior(cell.K)
+    noise = ProbitNoise() if cell.probit else AdaptiveGaussian()
     return ModelDef(
         (EntityDef("compounds", cell.n_rows, rp),
          EntityDef("proteins", cell.n_cols, NormalPrior(cell.K))),
-        (BlockDef(0, 1, AdaptiveGaussian(), sparse=True),),
+        (BlockDef(0, 1, noise, sparse=not cell.dense),),
         cell.K, use_pallas=False,
         bf16_gather=("bf16gather" in variant))
 
@@ -115,9 +140,18 @@ def mf_model_flops(cell: MFCell, n_chips: int) -> float:
 
     Gram 2*K^2 + rhs 2*K per nonzero per orientation, Cholesky K^3/3
     + two triangular solves 2*K^2 per row, one SDDMM 2*K per entry.
+    Fully-observed dense blocks instead share one (K, K) Gram per
+    half-sweep and regress every cell: rhs 2*K per cell per
+    orientation + residual 2*K per cell.
     """
-    nnz = cell.nnz_pad                      # padded upper bound
     K = cell.K
+    if cell.dense:
+        cells_ = cell.n_rows * cell.n_cols
+        gram = (2 * (cell.n_rows + cell.n_cols) * K * K
+                + 4 * cells_ * K)
+        chol = (cell.n_rows + cell.n_cols) * (K ** 3 / 3 + 2 * K * K)
+        return (gram + 2 * cells_ * K + chol) / n_chips
+    nnz = cell.nnz_pad                      # padded upper bound
     gram = 2 * nnz * (2 * K * K + 2 * K)
     chol = (cell.n_rows + cell.n_cols) * (K ** 3 / 3 + 2 * K * K)
     sddmm = 2 * nnz * K

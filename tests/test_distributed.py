@@ -9,6 +9,13 @@ reduction-order ULPs (K/K^2 moment psums, XLA batch-tiling of the
 per-row solves) — asserted at 2e-4 over 3 sweeps, an order of
 magnitude under a Gibbs chain's own step-to-step movement.
 
+The same contract and tolerance cover the widened sharded subset:
+probit noise (counter-based ``row_uniforms`` truncated-normal
+augmentation) and dense blocks (row-sharded stored orientations), and
+the HLO checks pin one fixed-factor all-gather per half-sweep for
+those paths too, plus ZERO per-sweep Macau ``FtF`` psums (the (D, D)
+side-Gramian is hoisted to placement time).
+
 Runs in subprocesses because the device count must be set before jax
 initializes (the main pytest process keeps the default 1 CPU device).
 """
@@ -92,6 +99,81 @@ _PARITY_SCRIPT = textwrap.dedent("""
     print("OK")
 """)
 
+_WIDENED_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (FixedGaussian, MFData, ProbitNoise,
+                            dense_block, init_state, gibbs_step)
+    from repro.core.blocks import BlockDef, EntityDef, ModelDef
+    from repro.core.gibbs import row_uniforms
+    from repro.core.distributed import (distributed_supported,
+                                        make_distributed_step)
+    from repro.core.priors import NormalPrior
+    from repro.core.sparse import random_sparse
+    from repro.launch.mesh import make_mesh
+
+    # the mechanism: probit's truncated-normal uniforms are bitwise
+    # shard slices, same contract as row_normals
+    key = jax.random.PRNGKey(5)
+    full = np.asarray(jax.jit(lambda: row_uniforms(key, 96, 16, 0))())
+    for s in range(8):
+        part = np.asarray(jax.jit(
+            lambda s=s: row_uniforms(key, 12, 16, jnp.int32(12 * s)))())
+        assert np.array_equal(part, full[12 * s:12 * (s + 1)]), s
+    print("row uniforms bitwise")
+
+    K = 8
+    n_rows, n_cols = 96, 48
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+
+    def two_entity(noise, sparse):
+        return ModelDef((EntityDef("r", n_rows, NormalPrior(K)),
+                         EntityDef("c", n_cols, NormalPrior(K))),
+                        (BlockDef(0, 1, noise, sparse=sparse),), K,
+                        False)
+
+    def parity(name, model, data):
+        state = init_state(model, data, seed=0)
+        st1 = state
+        for _ in range(3):
+            st1, m1 = gibbs_step(model, data, st1)
+        assert distributed_supported(model, mesh, data), name
+        step, ds, ss = make_distributed_step(model, mesh, data, state)
+        st2 = jax.device_put(state, ss)
+        pdata = jax.device_put(data, ds)
+        for _ in range(3):
+            st2, m2 = step(pdata, st2)
+        for a, b in zip(st1.factors, st2.factors):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(float(m1["rmse_train_0"]),
+                                   float(m2["rmse_train_0"]), rtol=1e-3)
+        print(name, "parity ok", float(m2["rmse_train_0"]))
+
+    # probit on sparse binary data (compound-activity classification)
+    bmat, _, _ = random_sparse(0, (n_rows, n_cols), 0.2, rank=4,
+                               binary=True)
+    parity("probit", two_entity(ProbitNoise(), True),
+           MFData((bmat,), (None, None)))
+
+    # fully-observed dense block (shared-Gram path)
+    R = rng.normal(size=(n_rows, n_cols)).astype(np.float32)
+    parity("dense_full", two_entity(FixedGaussian(5.0), False),
+           MFData((dense_block(R),), (None, None)))
+
+    # masked dense block under probit (per-row-Gram path + augmentation)
+    Xb = (R > 0).astype(np.float32)
+    m = (rng.random((n_rows, n_cols)) < 0.6).astype(np.float32)
+    parity("dense_masked_probit", two_entity(ProbitNoise(), False),
+           MFData((dense_block(Xb, mask=m),), (None, None)))
+    print("OK")
+""")
+
 _HLO_SCRIPT = textwrap.dedent("""
     import os, re
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -140,6 +222,85 @@ _HLO_SCRIPT = textwrap.dedent("""
     print("OK")
 """)
 
+_HLO_WIDENED_SCRIPT = textwrap.dedent("""
+    import os, re
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (FixedGaussian, MFData, ProbitNoise,
+                            dense_block, init_state)
+    from repro.core.blocks import BlockDef, EntityDef, ModelDef
+    from repro.core.distributed import (distributed_supported,
+                                        make_distributed_step)
+    from repro.core.priors import MacauPrior, NormalPrior
+    from repro.core.sparse import random_sparse
+    from repro.launch.mesh import make_mesh
+
+    K, D = 8, 12          # D != K so the FtF shape is unambiguous
+    n_rows, n_cols = 96, 48
+    mesh = make_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    bmat, _, _ = random_sparse(0, (n_rows, n_cols), 0.2, rank=4,
+                               binary=True)
+    smat, _, _ = random_sparse(1, (n_rows, n_cols), 0.2, rank=4)
+    R = rng.normal(size=(n_rows, n_cols)).astype(np.float32)
+    side = jnp.asarray(rng.normal(size=(n_rows, D)).astype(np.float32))
+
+    def ents(row_prior):
+        return (EntityDef("r", n_rows, row_prior),
+                EntityDef("c", n_cols, NormalPrior(K)))
+
+    cases = {
+        "probit_sparse": (
+            ModelDef(ents(NormalPrior(K)),
+                     (BlockDef(0, 1, ProbitNoise(), sparse=True),), K),
+            MFData((bmat,), (None, None))),
+        "probit_sparse_bf16": (
+            ModelDef(ents(NormalPrior(K)),
+                     (BlockDef(0, 1, ProbitNoise(), sparse=True),), K,
+                     use_pallas=False, bf16_gather=True),
+            MFData((bmat,), (None, None))),
+        "dense_full": (
+            ModelDef(ents(NormalPrior(K)),
+                     (BlockDef(0, 1, FixedGaussian(5.0), sparse=False),),
+                     K),
+            MFData((dense_block(R),), (None, None))),
+        "macau": (
+            ModelDef(ents(MacauPrior(K, D)),
+                     (BlockDef(0, 1, FixedGaussian(5.0), sparse=True),),
+                     K),
+            MFData((smat,), (side, None))),
+    }
+
+    for name, (model, data) in cases.items():
+        assert distributed_supported(model, mesh, data), name
+        state = init_state(model, data, seed=0)
+        step, ds, ss = make_distributed_step(model, mesh, data, state)
+        lowered = step.lower(data, state)
+
+        # communication contract, pre-backend: ONE all-gather of the
+        # fixed factor per half-sweep, bf16 on the wire when flagged
+        sh = [l for l in lowered.as_text().splitlines()
+              if "stablehlo.all_gather" in l]
+        assert len(sh) == len(model.entities), (name, sh)
+        for line in sh:
+            assert ("bf16" in line) == model.bf16_gather, (name, line)
+
+        txt = lowered.compile().as_text()
+        ags = re.findall(r"all-gather(?:-start)?\\(", txt)
+        assert len(ags) == len(model.entities), (name, len(ags))
+
+        # Macau FtF hoist: the (D, D) side-Gramian is placement-time
+        # data, so NO per-sweep all-reduce carries a DxD payload
+        ftf_psums = [l for l in txt.splitlines()
+                     if "all-reduce" in l and "f32[%d,%d]" % (D, D) in l]
+        assert not ftf_psums, (name, ftf_psums)
+        print(name, "all-gathers", len(ags), "FtF psums", len(ftf_psums))
+    print("OK")
+""")
+
 
 def _run(script):
     env = dict(os.environ)
@@ -158,5 +319,19 @@ def test_distributed_gibbs_matches_single_device():
 
 
 @pytest.mark.slow
+def test_distributed_widened_subset_matches_single_device():
+    """Probit noise + dense blocks ride the explicit sweep at the
+    same 2e-4 parity as the Gaussian sparse path."""
+    _run(_WIDENED_PARITY_SCRIPT)
+
+
+@pytest.mark.slow
 def test_distributed_hlo_one_allgather_per_halfsweep():
     _run(_HLO_SCRIPT)
+
+
+@pytest.mark.slow
+def test_distributed_hlo_widened_paths_and_ftf_hoist():
+    """One all-gather per half-sweep holds for probit/dense/Macau, and
+    the Macau side-Gramian psum is gone from the per-sweep program."""
+    _run(_HLO_WIDENED_SCRIPT)

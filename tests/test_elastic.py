@@ -1,0 +1,129 @@
+"""Elastic checkpoint/re-mesh round-trip: state on DISK, not just
+in-process.
+
+The in-process 8 -> 6 shrink in tests/test_distributed.py proves the
+sweep tolerates a survivor-count change; this harness proves the full
+production failure path (ROADMAP "elastic re-mesh test at scale"):
+
+  1. run a sharded chain on an 8-device mesh,
+  2. checkpoint it through ``checkpoint/ckpt.py`` (atomic npz-on-disk,
+     the same manager the train loop uses),
+  3. simulate a device loss (``runtime/fault.FailureSim``),
+  4. rebuild a mesh over the 6 survivors with ``ElasticMesh``,
+  5. restore the checkpoint from disk into the new shardings and
+     continue the chain,
+
+and asserts the restored chain matches the single-device reference at
+the SAME 2e-4 tolerance as tests/test_distributed.py — possible only
+because every per-row draw (factor normals AND probit truncated-normal
+uniforms) is counter-based on the global row index, so neither the
+mesh shape nor the host round-trip perturbs the sampled bits.
+
+Runs on the paper's headline classification workload (probit noise),
+exercising the widened sharded subset end to end.  Subprocess because
+the device count locks at jax init.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ELASTIC_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core import MFData, ProbitNoise, init_state, gibbs_step
+    from repro.core.blocks import BlockDef, EntityDef, ModelDef
+    from repro.core.distributed import (distributed_supported,
+                                        make_distributed_step)
+    from repro.core.priors import NormalPrior
+    from repro.core.sparse import random_sparse
+    from repro.runtime.fault import ElasticMesh, FailureSim
+
+    K = 8
+    n_rows, n_cols = 96, 48
+    mat, _, _ = random_sparse(0, (n_rows, n_cols), 0.2, rank=4,
+                              binary=True)
+    model = ModelDef((EntityDef("r", n_rows, NormalPrior(K)),
+                      EntityDef("c", n_cols, NormalPrior(K))),
+                     (BlockDef(0, 1, ProbitNoise(), sparse=True),), K,
+                     False)
+    data = MFData((mat,), (None, None))
+    state0 = init_state(model, data, seed=0)
+
+    TOTAL, FAIL_AT = 4, 2
+    # single-device reference chain, uninterrupted
+    ref = state0
+    for _ in range(TOTAL):
+        ref, mref = gibbs_step(model, data, ref)
+
+    ckpt = CheckpointManager(tempfile.mkdtemp(), keep=2)
+    sim = FailureSim(fail_at=[FAIL_AT], lose_devices=2)
+    elastic = ElasticMesh(model_parallel=1)
+    devices = list(jax.devices())            # 8 healthy to start
+
+    mesh = elastic.build(devices)
+    assert mesh.devices.size == 8
+    assert distributed_supported(model, mesh, data)
+    step, ds, ss = make_distributed_step(model, mesh, data, state0)
+    pdata = jax.device_put(data, ds)
+    st = jax.device_put(state0, ss)
+
+    sweep, resumed_on = 0, None
+    while sweep < TOTAL:
+        try:
+            sim.check(sweep)
+            st, m = step(pdata, st)
+            sweep += 1
+            ckpt.save(sweep, st, blocking=True)   # host npz on disk
+        except FailureSim.DeviceLost:
+            # lose two chips -> rebuild mesh over the 6 survivors,
+            # restore the LAST COMPLETE on-disk checkpoint into the
+            # new shardings, and continue the same chain
+            devices = devices[:len(devices) - sim.lose]
+            mesh = elastic.build(devices)
+            assert mesh.devices.size == 6
+            assert distributed_supported(model, mesh, data)
+            step, ds, ss = make_distributed_step(model, mesh, data,
+                                                 state0)
+            pdata = jax.device_put(data, ds)
+            restored = ckpt.restore_latest(state0)
+            assert restored is not None, "no complete checkpoint"
+            sweep, host_state = restored
+            resumed_on = sweep
+            st = jax.device_put(host_state, ss)
+
+    assert sim.failures == 1 and resumed_on == FAIL_AT
+    assert int(st.step) == TOTAL
+
+    # the re-meshed, disk-round-tripped chain IS the reference chain
+    for a, b in zip(ref.factors, st.factors):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(mref["rmse_train_0"]),
+                               float(m["rmse_train_0"]), rtol=1e-3)
+    print("resumed on sweep", resumed_on, "final rmse",
+          float(m["rmse_train_0"]))
+    print("OK")
+""")
+
+
+def _run(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_elastic_checkpoint_remesh_roundtrip():
+    _run(_ELASTIC_SCRIPT)

@@ -1,0 +1,80 @@
+"""Golden-chain regression: the sampled chain itself is pinned.
+
+Parity and property tests check *relationships* (sharded == single
+device, batched == loop); none of them notices if a refactor changes
+the RNG consumption order and silently produces a different — equally
+valid-looking — chain, which would invalidate every stored checkpoint
+and reproducibility claim.  This locks the 3-sweep RMSE/alpha
+trajectories of one Gaussian and one probit model on a fixed seed into
+``results/golden_chains.json``.
+
+Tolerance: 1e-3 relative.  XLA reduction-order drift across versions
+measures ~1e-6..1e-5 on these trajectories; a changed draw sequence
+moves them by ~1e-1.  Regenerate INTENTIONALLY after an acknowledged
+chain-breaking change:
+
+    PYTHONPATH=src python tests/test_golden_chain.py --regen
+"""
+import json
+import os
+
+import numpy as np
+
+from repro.core import (AdaptiveGaussian, BlockDef, EntityDef, MFData,
+                        ModelDef, NormalPrior, ProbitNoise, gibbs_step,
+                        init_state)
+from repro.core.sparse import random_sparse
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "golden_chains.json")
+SWEEPS = 3
+SEED = 11
+
+
+def _chain(name):
+    K = 4
+    n_rows, n_cols = 48, 32
+    binary = name == "probit"
+    mat, _, _ = random_sparse(SEED, (n_rows, n_cols), 0.3, rank=3,
+                              binary=binary)
+    noise = ProbitNoise() if binary else AdaptiveGaussian()
+    model = ModelDef((EntityDef("r", n_rows, NormalPrior(K)),
+                      EntityDef("c", n_cols, NormalPrior(K))),
+                     (BlockDef(0, 1, noise, sparse=True),), K, False)
+    data = MFData((mat,), (None, None))
+    state = init_state(model, data, seed=SEED)
+    rmse, alpha = [], []
+    for _ in range(SWEEPS):
+        state, metrics = gibbs_step(model, data, state)
+        rmse.append(float(metrics["rmse_train_0"]))
+        alpha.append(float(metrics["alpha_0"]))
+    return {"rmse_train": rmse, "alpha": alpha}
+
+
+def _run_all():
+    return {name: _chain(name) for name in ("gaussian", "probit")}
+
+
+def test_golden_chain_trajectories():
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    got = _run_all()
+    assert set(got) == set(golden["chains"])
+    for name, traj in got.items():
+        for key in ("rmse_train", "alpha"):
+            np.testing.assert_allclose(
+                traj[key], golden["chains"][name][key],
+                rtol=1e-3, atol=1e-5,
+                err_msg=f"{name}.{key} drifted — if the chain change "
+                        "is intentional, regen the fixture (see module "
+                        "docstring)")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" not in sys.argv:
+        sys.exit("pass --regen to overwrite the fixture")
+    out = {"seed": SEED, "sweeps": SWEEPS, "chains": _run_all()}
+    with open(FIXTURE, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", FIXTURE)

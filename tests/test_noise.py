@@ -82,3 +82,39 @@ def test_probit_augment():
     zn = np.asarray(z)
     assert (zn[pos] > 0).all()
     assert (zn[~pos] < 0).all()
+
+
+def test_probit_augment_row_offset_slices_bitwise():
+    """The counter-based contract the distributed sweep relies on: a
+    shard augmenting rows [off, off+n) with ``row_offset=off`` draws
+    exactly the bits of the full augmentation's slice."""
+    rng = np.random.default_rng(0)
+    pred = jnp.asarray(rng.normal(size=(24, 9)), jnp.float32)
+    vals = jnp.asarray((rng.random((24, 9)) < 0.5), jnp.float32)
+    mask = jnp.ones_like(vals)
+    n = ProbitNoise()
+    st = n.init()
+    key = jax.random.PRNGKey(7)
+    z_full, _ = n.augment(key, st, pred, vals, mask)
+    for off, cnt in ((0, 8), (8, 8), (16, 8), (6, 12)):
+        sl = slice(off, off + cnt)
+        z_part, _ = n.augment(key, st, pred[sl], vals[sl], mask[sl],
+                              row_offset=off)
+        np.testing.assert_array_equal(np.asarray(z_part),
+                                      np.asarray(z_full)[sl])
+
+
+def test_probit_augment_batch_shape_independent():
+    """Row i's draw depends only on (key, global row index) — never on
+    how many rows ride in the batch (the row_normals trick, applied to
+    the probit uniforms)."""
+    rng = np.random.default_rng(1)
+    pred = jnp.asarray(rng.normal(size=(16, 5)), jnp.float32)
+    vals = jnp.asarray((rng.random((16, 5)) < 0.5), jnp.float32)
+    mask = jnp.ones_like(vals)
+    n = ProbitNoise()
+    st = n.init()
+    key = jax.random.PRNGKey(11)
+    z16, _ = n.augment(key, st, pred, vals, mask)
+    z4, _ = n.augment(key, st, pred[:4], vals[:4], mask[:4])
+    np.testing.assert_array_equal(np.asarray(z4), np.asarray(z16)[:4])

@@ -11,7 +11,11 @@ Invariants covered:
   * one gibbs_step preserves every invariant of the sampler state
     (shapes, finiteness, PSD-able precision, positive noise alpha)
     for arbitrary planted data;
-  * with_coo_values rebuilds both orientations consistently.
+  * with_coo_values rebuilds both orientations consistently;
+  * the probit truncated-normal machinery: _truncnorm draws carry the
+    observation's sign and stay finite for |mean| up to 8, and the
+    counter-based row_uniforms (the distributed probit contract) give
+    bitwise shard-slice parity for every divisor split.
 """
 import jax
 import jax.numpy as jnp
@@ -23,8 +27,9 @@ except ImportError:   # container without dev deps — see requirements-dev.txt
 
 from repro.core import (AdaptiveGaussian, BlockDef, EntityDef,
                         FixedGaussian, MFData, ModelDef, NormalPrior,
-                        from_coo, gibbs_step, init_state)
-from repro.core.gibbs import _sparse_contrib
+                        ProbitNoise, from_coo, gibbs_step, init_state)
+from repro.core.gibbs import _sparse_contrib, row_uniforms
+from repro.core.noise import _truncnorm
 from repro.kernels import ref
 
 
@@ -159,6 +164,77 @@ def test_gibbs_step_preserves_state_invariants(prob, bf16):
         assert evals.min() > 0
     assert float(st1.noises[0]["alpha"]) > 0
     assert np.isfinite(float(metrics["rmse_train_0"]))
+
+
+@st.composite
+def truncnorm_problem(draw, max_n=64):
+    n = draw(st.integers(1, max_n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale_tenths = draw(st.integers(0, 80))     # |mean| up to 8.0
+    rng = np.random.default_rng(seed)
+    mean = rng.uniform(-1.0, 1.0, size=n).astype(np.float32) \
+        * (scale_tenths / 10.0)
+    obs = (rng.random(n) < 0.5).astype(np.float32)
+    return seed, mean, obs
+
+
+@settings(max_examples=30, deadline=None)
+@given(truncnorm_problem())
+def test_truncnorm_sign_agreement_and_finite(prob):
+    """The latent draw stays finite out to |mean| = 8, and lands on
+    the observation's side of 0 wherever the f32 inverse-CDF can
+    resolve the tail (|mean| <= 4; beyond ~5 the 1e-7 CDF clip trades
+    sign for finiteness, which the clip-to-[mean-8, mean+8] bounds)."""
+    seed, mean, obs = prob
+    z = np.asarray(_truncnorm(jax.random.PRNGKey(seed),
+                              jnp.asarray(mean), jnp.asarray(obs)))
+    assert np.isfinite(z).all(), (mean, z)
+    resolvable = np.abs(mean) <= 4.0
+    agree = (z > 0) == (obs > 0)
+    assert agree[resolvable].all(), (mean, obs, z)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 24), st.integers(0, 2**31 - 1))
+def test_row_uniforms_shard_slices_bitwise(n_shards, width, seed):
+    """Counter-based uniforms: a shard holding rows [off, off+n) draws
+    EXACTLY the bits of the full draw's slice — the probit analogue of
+    the row_normals contract the distributed sweep is built on."""
+    key = jax.random.PRNGKey(seed)
+    rows_per = 6
+    n_rows = n_shards * rows_per
+    full = np.asarray(row_uniforms(key, n_rows, width))
+    assert ((0.0 <= full) & (full < 1.0)).all()
+    for s in range(n_shards):
+        part = np.asarray(row_uniforms(key, rows_per, width,
+                                       row_offset=rows_per * s))
+        np.testing.assert_array_equal(part,
+                                      full[rows_per * s:
+                                           rows_per * (s + 1)])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.integers(0, 2**31 - 1))
+def test_probit_augment_shard_slices_bitwise(n_shards, seed):
+    """ProbitNoise.augment(row_offset=...) on a row slice reproduces
+    the matching slice of the full augmentation bit for bit (given the
+    same pred slice) — what admits probit into the sharded sweep."""
+    rng = np.random.default_rng(seed)
+    rows_per, width = 5, 7
+    n_rows = n_shards * rows_per
+    pred = jnp.asarray(rng.normal(size=(n_rows, width)), jnp.float32)
+    vals = jnp.asarray((rng.random((n_rows, width)) < 0.5), jnp.float32)
+    mask = jnp.asarray((rng.random((n_rows, width)) < 0.8), jnp.float32)
+    noise = ProbitNoise()
+    state = noise.init()
+    key = jax.random.PRNGKey(seed)
+    z_full, _ = noise.augment(key, state, pred, vals, mask)
+    for s in range(n_shards):
+        sl = slice(rows_per * s, rows_per * (s + 1))
+        z_part, _ = noise.augment(key, state, pred[sl], vals[sl],
+                                  mask[sl], row_offset=rows_per * s)
+        np.testing.assert_array_equal(np.asarray(z_part),
+                                      np.asarray(z_full)[sl])
 
 
 @settings(max_examples=15, deadline=None)
