@@ -46,7 +46,7 @@ def main() -> None:
         compile_modes.run(*((400, 64) if q else (1000, 128)))
     if want("gfa"):
         from . import gfa_repro
-        gfa_repro.run()
+        gfa_repro.run(quick=q)
     if want("macau"):
         from . import macau_lift
         macau_lift.run(*((500, 64, 60, 60) if q else (1500, 120, 120, 120)))

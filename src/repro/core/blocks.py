@@ -25,6 +25,7 @@ from .priors import MacauPrior, NormalPrior, SpikeAndSlabPrior
 from .sparse import SparseMatrix, from_coo  # noqa: F401  (re-export)
 
 Prior = Any    # NormalPrior | MacauPrior | SpikeAndSlabPrior
+               # | FixedNormalPrior
 Noise = Any    # FixedGaussian | AdaptiveGaussian | ProbitNoise
 
 
@@ -75,8 +76,15 @@ class DenseBlock:
 
 def dense_block(X: np.ndarray, mask: Optional[np.ndarray] = None
                 ) -> DenseBlock:
+    """Host-side DenseBlock constructor (concrete arrays, not tracers).
+
+    An explicit mask that is all-ones is detected and treated exactly
+    like ``mask=None``: ``fully=True`` selects the shared-(K, K) Gram
+    path in the factor update instead of the per-row masked Gram — the
+    two constructions produce identical sweeps.
+    """
     X = jnp.asarray(X, jnp.float32)
-    if mask is None:
+    if mask is None or bool(np.all(np.asarray(mask) == 1.0)):
         ones = jnp.ones_like(X)
         return DenseBlock(X, ones, X.T, ones.T, fully=True)
     mask = jnp.asarray(mask, jnp.float32)

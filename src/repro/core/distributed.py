@@ -31,8 +31,17 @@ over the production mesh (``compat.shard_map`` — version-portable):
 * the Macau side-Gramian ``FtF = side^T side`` is STATIC data: it is
   computed once at ``make_distributed_step`` placement time and passed
   in replicated, so the per-sweep hyper path carries no (D, D) psum;
+* spike-and-slab priors (the GFA composition, paper Table 1
+  "Normal + SnS") run the same schedule: the coordinate-wise q/l
+  moments are row-local given the gathered fixed factor, so the
+  per-component loop adds ZERO collectives, and the hyper update
+  reduces exactly two K-sized psums (inclusion counts + per-component
+  sum of squares, ``SpikeAndSlabPrior.sample_hyper_moments``); the
+  inclusion indicators and slab normals are counter-based per row
+  (``gibbs.row_bernoulli``/``row_normals``, folded per component);
 * counter-based per-row RNG (``gibbs.row_normals`` for the factor
-  draws, ``gibbs.row_uniforms`` for the probit latents) means each
+  draws, ``gibbs.row_uniforms`` for the probit latents,
+  ``gibbs.row_bernoulli`` for the SnS inclusions) means each
   shard draws exactly the bits the single-device sweep draws for its
   rows (asserted bitwise in tests), so the sampled chain agrees with
   the single-device chain up to reduction-order ULPs — psum grouping
@@ -40,13 +49,14 @@ over the production mesh (``compat.shard_map`` — version-portable):
   per-row solves; measured ~1e-5 after 3 sweeps, asserted at 2e-4 —
   which is what makes elastic restart onto a different mesh safe.
   Verified against the single-device chain on 8 simulated CPU devices
-  in ``tests/test_distributed.py`` (Gaussian, probit, and dense-block
-  models) and through an on-disk checkpoint + shrunk-mesh restore in
-  ``tests/test_elastic.py``.
+  in ``tests/test_distributed.py`` (Gaussian, probit, dense-block, and
+  spike-and-slab/GFA models) and through an on-disk checkpoint +
+  shrunk-mesh restore in ``tests/test_elastic.py``.
 
-Models outside the sharded subset (spike-and-slab priors, self-blocks,
-row counts that do not divide the mesh) fall back to auto-sharded pjit
-over the same shardings — slower collectives, same results.
+Models outside the sharded subset (self-blocks, row counts that do not
+divide the mesh) fall back to auto-sharded pjit over the same
+shardings — slower collectives, same results.  Every prior in the
+paper's Table 1 now runs the explicit sweep.
 
 ``FACTOR_AXES`` flattens ("pod", "data", "model") — MF has no tensor
 axis worth model-parallelism (K is tiny), so every chip takes a row
@@ -65,9 +75,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .. import compat
 from .blocks import DenseBlock, ModelDef
 from .gibbs import (MFData, MFState, _dense_contrib,
-                    _sample_normal_factor, _sparse_contrib, gibbs_step)
+                    _sample_normal_factor, _sample_sns_factor,
+                    _sparse_contrib, gibbs_step)
 from .noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
-from .priors import FixedNormalPrior, MacauPrior, NormalPrior
+from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
+                     SpikeAndSlabPrior)
 
 FACTOR_AXES = ("pod", "data", "model")
 
@@ -152,18 +164,21 @@ def distributed_supported(model: ModelDef, mesh: Mesh,
     P() with check off never validates replication).  The subset now
     spans sparse AND dense blocks under Gaussian, adaptive-Gaussian,
     and probit noise (probit's truncated-normal draws are per-row
-    counter-based, so shard draws slice the single-device chain).
-    Outside it (spike-and-slab coordinate descent, self-blocks,
-    non-dividing row counts, dense payloads without the stored
-    transposed orientation) ``make_distributed_step`` falls back to
-    pjit.
+    counter-based, so shard draws slice the single-device chain), and
+    every Table-1 prior including spike-and-slab (counter-based
+    ``row_bernoulli``/``row_normals`` coordinate updates + two K-sized
+    hyper psums) — the GFA composition runs the explicit sweep.
+    Outside it (self-blocks, non-dividing row counts, dense payloads
+    without the stored transposed orientation)
+    ``make_distributed_step`` falls back to pjit.
     """
     S = _n_shards(mesh)
     for e, ent in enumerate(model.entities):
         if ent.n_rows % S != 0:
             return False
         if not isinstance(ent.prior,
-                          (NormalPrior, MacauPrior, FixedNormalPrior)):
+                          (NormalPrior, MacauPrior, FixedNormalPrior,
+                           SpikeAndSlabPrior)):
             return False
         if isinstance(ent.prior, MacauPrior) and (
                 data is None or data.sides[e] is None):
@@ -221,6 +236,13 @@ def _psum_hyper(model: ModelDef, e: int, key, u, hyper, side, axes,
         return prior.sample_hyper_moments(
             key, hyper, F_sum=psum(u.sum(axis=0)), F_cov=psum(u.T @ u),
             n_rows=N)
+    if isinstance(prior, SpikeAndSlabPrior):
+        # two K-sized payloads: per-component inclusion counts and
+        # sum of squares — the ONLY collectives SnS adds to a sweep
+        s = (jnp.abs(u) > 0).astype(jnp.float32)
+        return prior.sample_hyper_moments(
+            key, hyper, n_incl=psum(s.sum(axis=0)),
+            sumsq=psum((u * u).sum(axis=0)), n_rows=N)
     # moment-free priors (FixedNormalPrior): identical on every shard
     return prior.sample_hyper(key, u, hyper)
 
@@ -282,6 +304,18 @@ def _sharded_sweep(model: ModelDef, axes: Tuple[str, ...],
 
         # 2. this shard's factor rows from their conditional
         prior = ent.prior
+        if isinstance(prior, SpikeAndSlabPrior):
+            # coordinate-wise SnS update: q/l moments are row-local
+            # given the gathered fixed factor, and the inclusion/slab
+            # draws are counter-based on the global row index — the
+            # body is the single-device one, offset to this shard.
+            # Zero per-component collectives.
+            factors[e] = _sample_sns_factor(model, data, k_fac, e, u,
+                                            hyper, fixed_view, noises,
+                                            row_offset=row_offset)
+            hypers[e] = hyper
+            gathered.pop(e, None)
+            continue
         Lam_p = prior.precision_term(hyper)
         if isinstance(prior, MacauPrior):
             b_p = prior.mean_term(hyper, ent.n_rows, side=side)
@@ -352,7 +386,7 @@ def _sharded_sweep(model: ModelDef, axes: Tuple[str, ...],
         nnz = psum(jnp.sum(msk))
         noises[bi] = blk.noise.sample_state(nkeys[bi], noises[bi], pred,
                                             vals, msk, sse=se, nnz=nnz)
-        metrics[f"rmse_train_{bi}"] = jnp.sqrt(se / nnz)
+        metrics[f"rmse_train_{bi}"] = jnp.sqrt(se / jnp.maximum(nnz, 1.0))
         metrics[f"alpha_{bi}"] = noises[bi]["alpha"]
 
     new_state = MFState(key, tuple(factors), tuple(hypers), tuple(noises),

@@ -164,6 +164,26 @@ def row_uniforms(key, n_rows: int, width: int, row_offset=0, *,
                                      minval, maxval))(keys)
 
 
+def row_bernoulli(key, p, row_offset=0):
+    """Bernoulli(p) draws, counter-based row-by-row.
+
+    ``p`` is (n_rows,) or (n_rows, W); row i's draw(s) consume the
+    uniforms of ``fold_in(key, row_offset + i)`` via
+    :func:`row_uniforms` — the same contract as ``row_normals``: a
+    pure function of the sweep key and the row's GLOBAL index, never
+    of the batch shape.  This is what the spike-and-slab inclusion
+    indicators consume (folded per component), so SnS shard draws are
+    bitwise slices of the single-device chain and the GFA composition
+    can run the explicit distributed sweep.
+    """
+    n_rows = p.shape[0]
+    width = 1 if p.ndim == 1 else p.shape[1]
+    u = row_uniforms(key, n_rows, width, row_offset)
+    if p.ndim == 1:
+        u = u[:, 0]
+    return u < p
+
+
 def _sample_normal_factor(key, gram_shared, gram_rows, rhs, Lam_p, b_p,
                           row_offset=0):
     """u_i ~ N(Lam_i^{-1} b_i, Lam_i^{-1}) batched over rows.
@@ -195,7 +215,7 @@ def _sample_normal_factor(key, gram_shared, gram_rows, rhs, Lam_p, b_p,
 
 def _sample_sns_factor(model: ModelDef, data: MFData, key,
                        e: int, u: jnp.ndarray, hyper,
-                       factors, noises) -> jnp.ndarray:
+                       fixed_for, noises, row_offset=0) -> jnp.ndarray:
     """Coordinate-wise spike-and-slab update for entity ``e``.
 
     For each latent component k (sequentially — the conditionals are
@@ -205,17 +225,26 @@ def _sample_sns_factor(model: ModelDef, data: MFData, key,
         l_ik = sum_b alpha_b sum_t m (r - pred_{-k}) f_k
         odds = rho/(1-rho) * sqrt(tau_k/q) * exp(l^2 / 2q)
         s ~ Bern(odds/(1+odds));  u_ik = s * N(l/q, 1/q)
+
+    ``fixed_for(o)`` returns the dense (pre-gathered) fixed factor of
+    entity ``o``; ``u`` and the block payload rows may be a row shard,
+    with ``row_offset`` the global index of row 0.  Both q and l are
+    row-local, and every stochastic quantity — the Bernoulli inclusion
+    indicator (``row_bernoulli``) and the slab normal (``row_normals``),
+    each folded per component — is a counter-based function of the
+    GLOBAL row index, so this body runs unchanged inside
+    ``distributed._sharded_sweep`` and shard draws are bitwise slices
+    of the single-device chain.
     """
     K = model.num_latent
     touching = model.blocks_touching(e)
 
     # gather per-block views once
     views = []
-    gview = _gather_view(model, factors)
     for bi, as_row in touching:
         blk = model.blocks[bi]
         payload = data.blocks[bi]
-        fixed = gview[blk.other(e)]
+        fixed = fixed_for(blk.other(e))
         alpha = noises[bi]["alpha"]
         if blk.sparse:
             padded = payload.rows if as_row else payload.cols
@@ -225,10 +254,11 @@ def _sample_sns_factor(model: ModelDef, data: MFData, key,
         else:
             X, m = payload.oriented(as_row)
             pred = u @ fixed.T
-            views.append(("dn", fixed, X, m, pred, alpha))
+            kind = "df" if payload.fully else "dn"
+            views.append((kind, fixed, X, m, pred, alpha))
 
     rho, tau = hyper["rho"], hyper["tau"]
-    keys = jax.random.split(key, 2 * K)
+    k_incl, k_slab = jax.random.split(key)
 
     for k in range(K):
         q = tau[k]
@@ -240,6 +270,16 @@ def _sample_sns_factor(model: ModelDef, data: MFData, key,
                 pred_mk = pred - u[:, k][:, None] * fk
                 q = q + alpha * jnp.sum(fk * fk * m, axis=-1)
                 l = l + alpha * jnp.sum((val - pred_mk) * m * fk, axis=-1)
+                new_preds.append(pred_mk)
+            elif kind == "df":
+                fk = Fv[:, k]                           # (C,)
+                pred_mk = pred - jnp.outer(u[:, k], fk)
+                # fully observed: every row shares the one scalar
+                # sum_c fk_c^2 and the mask multiply drops — the GFA
+                # production views take this branch, saving an
+                # O(rows x cols) matvec per component per view
+                q = q + alpha * jnp.sum(fk * fk)
+                l = l + alpha * ((val - pred_mk) @ fk)
                 new_preds.append(pred_mk)
             else:
                 fk = Fv[:, k]                           # (C,)
@@ -254,8 +294,10 @@ def _sample_sns_factor(model: ModelDef, data: MFData, key,
                     + 0.5 * (jnp.log(tau[k]) - jnp.log(q))
                     + 0.5 * mu * l)
         p_incl = jax.nn.sigmoid(log_odds)
-        s = jax.random.bernoulli(keys[2 * k], p_incl).astype(jnp.float32)
-        eps = jax.random.normal(keys[2 * k + 1], mu.shape, jnp.float32)
+        s = row_bernoulli(jax.random.fold_in(k_incl, k), p_incl,
+                          row_offset).astype(jnp.float32)
+        eps = row_normals(jax.random.fold_in(k_slab, k), u.shape[0], 1,
+                          row_offset)[:, 0]
         u_k = s * (mu + eps / jnp.sqrt(q))
         u = u.at[:, k].set(u_k)
 
@@ -330,9 +372,10 @@ def _entity_update(model: ModelDef, data: MFData, key, e: int,
         hyper = prior.sample_hyper(k_hyp, u, hypers[e])
 
     # 2. factor matrix from its conditional
+    gview = _gather_view(model, factors)
     if isinstance(prior, SpikeAndSlabPrior):
         u_new = _sample_sns_factor(model, data, k_fac, e, u, hyper,
-                                   factors, noises)
+                                   lambda o: gview[o], noises)
         return u_new, hyper
 
     Lam_p = prior.precision_term(hyper)
@@ -345,7 +388,6 @@ def _entity_update(model: ModelDef, data: MFData, key, e: int,
     gram_rows = None
     rhs_acc = jnp.zeros((ent.n_rows, model.num_latent), jnp.float32)
     bkeys = jax.random.split(k_blk, max(1, len(model.blocks)))
-    gview = _gather_view(model, factors)
     for bi, as_row in model.blocks_touching(e):
         blk = model.blocks[bi]
         fixed = gview[blk.other(e)]
@@ -410,7 +452,10 @@ def gibbs_step(model: ModelDef, data: MFData, state: MFState
         noises[bi] = blk.noise.sample_state(nkeys[bi], noises[bi], pred,
                                             vals, mask)
         se = jnp.sum(((vals - pred) * mask) ** 2)
-        metrics[f"rmse_train_{bi}"] = jnp.sqrt(se / jnp.sum(mask))
+        # all-masked blocks (padded shard views) have nnz == 0: report
+        # rmse 0 instead of 0/0 -> NaN poisoning the metric trace
+        metrics[f"rmse_train_{bi}"] = jnp.sqrt(
+            se / jnp.maximum(jnp.sum(mask), 1.0))
         metrics[f"alpha_{bi}"] = noises[bi]["alpha"]
 
     new_state = MFState(key, tuple(factors), tuple(hypers), tuple(noises),

@@ -70,8 +70,11 @@ class AdaptiveGaussian:
         a_post = self.a0 + 0.5 * nnz
         b_post = self.b0 + 0.5 * sse
         alpha = jax.random.gamma(key, a_post) / b_post
-        return {"alpha": jnp.clip(alpha, 1e-6, self.sn_max)
-                .astype(jnp.float32)}
+        alpha = jnp.clip(alpha, 1e-6, self.sn_max).astype(jnp.float32)
+        # an all-masked block (or fully padded shard view) has no
+        # residuals to learn from: keep the previous alpha instead of
+        # drawing from the data-free (degenerate) Gamma conditional
+        return {"alpha": jnp.where(nnz > 0, alpha, state["alpha"])}
 
     def augment(self, key, state, pred, vals, mask, row_offset=0):
         return vals, state["alpha"]

@@ -40,16 +40,26 @@ def rmse(pred: jnp.ndarray, truth: jnp.ndarray) -> jnp.ndarray:
 
 def auc(pred: np.ndarray, truth: np.ndarray, threshold: float = 0.5
         ) -> float:
-    """Rank-based AUC (Mann-Whitney); truth binarized at threshold."""
+    """Rank-based AUC (Mann-Whitney); truth binarized at threshold.
+
+    Tied predictions get MIDRANKS (the average of the ranks they
+    span), the standard tie-corrected Mann-Whitney statistic: each
+    tied positive/negative pair then contributes 1/2, matching the
+    trapezoidal ROC area.  Raw ``argsort`` ranks instead assign tied
+    groups an arbitrary input-order permutation, biasing the AUC on
+    discrete/probit outputs where ties are the common case.
+    """
     pred = np.asarray(pred)
     pos = np.asarray(truth) > threshold
     n_pos = int(pos.sum())
     n_neg = pos.size - n_pos
     if n_pos == 0 or n_neg == 0:
         return float("nan")
-    order = np.argsort(pred, kind="stable")
-    ranks = np.empty(pred.size)
-    ranks[order] = np.arange(1, pred.size + 1)
+    _, inv, counts = np.unique(pred, return_inverse=True,
+                               return_counts=True)
+    # group g spans ranks (end - count, end]; its midrank is their mean
+    end = np.cumsum(counts)
+    ranks = (end - (counts - 1) / 2.0)[inv]
     s = ranks[pos].sum()
     return float((s - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
 

@@ -304,7 +304,7 @@ class SpikeAndSlabPrior:
     Per-component inclusion probability rho_k ~ Beta(a, b) and slab
     precision tau_k ~ Gamma(c, d) are resampled each sweep.  The factor
     update itself is the coordinate-wise conditional (handled in
-    ``gibbs.py::sns_half_sweep`` because it needs the residuals);
+    ``gibbs.py::_sample_sns_factor`` because it needs the residuals);
     this class owns the hyper-state.
     """
 
@@ -319,22 +319,40 @@ class SpikeAndSlabPrior:
         return {"rho": jnp.full((K,), 0.5, jnp.float32),
                 "tau": jnp.ones((K,), jnp.float32)}
 
-    def sample_hyper(self, key, F, hyper, n_rows=None, **_):
-        """F is the factor matrix (N, K); zeros mark excluded entries."""
-        K = self.num_latent
-        N = jnp.asarray(F.shape[0] if n_rows is None else n_rows,
-                        jnp.float32)
-        kr, kt1, kt2 = jax.random.split(key, 3)
+    def sample_hyper(self, key, F, hyper, n_incl=None, sumsq=None,
+                     n_rows=None, **_):
+        """F is the factor matrix (N, K); zeros mark excluded entries.
+
+        ``n_incl``/``sumsq``/``n_rows`` override the locally computed
+        per-component moments — the distributed sweep psums them over
+        row shards first (two K-sized collectives).
+        """
         s = (jnp.abs(F) > 0).astype(jnp.float32)     # inclusion indicators
-        n_in = s.sum(axis=0)                          # (K,)
-        # rho_k ~ Beta(a + n_in, b + N - n_in)
-        g1 = jax.random.gamma(kr, self.rho_a + n_in)
-        g2 = jax.random.gamma(kt1, self.rho_b + N - n_in)
+        return self.sample_hyper_moments(
+            key, hyper,
+            n_incl=s.sum(axis=0) if n_incl is None else n_incl,
+            sumsq=(F * F).sum(axis=0) if sumsq is None else sumsq,
+            n_rows=F.shape[0] if n_rows is None else n_rows)
+
+    def sample_hyper_moments(self, key, hyper, *, n_incl, sumsq, n_rows):
+        """SnS hyper-sample from sufficient statistics only.
+
+        ``n_incl`` (K,) counts the included (nonzero) entries per
+        component and ``sumsq`` (K,) their sum of squares; the
+        distributed sweep psums both over row shards — the ONLY
+        collectives the spike-and-slab composition adds to a sweep —
+        so the hyper-sample is an identical replicated computation on
+        every device, mirroring ``NormalPrior.sample_hyper_moments``.
+        """
+        N = jnp.asarray(n_rows, jnp.float32)
+        kr, kt1, kt2 = jax.random.split(key, 3)
+        # rho_k ~ Beta(a + n_incl, b + N - n_incl)
+        g1 = jax.random.gamma(kr, self.rho_a + n_incl)
+        g2 = jax.random.gamma(kt1, self.rho_b + N - n_incl)
         rho = g1 / (g1 + g2)
-        # tau_k ~ Gamma(c + n_in/2, d + sum v^2 / 2)
-        ss = (F * F).sum(axis=0)
-        tau = (jax.random.gamma(kt2, self.tau_c + 0.5 * n_in)
-               / (self.tau_d + 0.5 * ss))
+        # tau_k ~ Gamma(c + n_incl/2, d + sum v^2 / 2)
+        tau = (jax.random.gamma(kt2, self.tau_c + 0.5 * n_incl)
+               / (self.tau_d + 0.5 * sumsq))
         return {"rho": jnp.clip(rho, 1e-4, 1.0 - 1e-4), "tau": tau}
 
     def precision_term(self, hyper) -> jnp.ndarray:

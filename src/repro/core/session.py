@@ -48,7 +48,17 @@ class SessionResult:
     samples: Optional[List[Tuple[np.ndarray, ...]]] = None
 
 
-_PRIORS = {"normal": NormalPrior, "spikeandslab": SpikeAndSlabPrior}
+_PRIORS = {"normal": NormalPrior, "spikeandslab": SpikeAndSlabPrior,
+           "fixednormal": FixedNormalPrior}
+
+
+def _prior_by_name(name: str, num_latent: int):
+    if name not in _PRIORS:
+        raise ValueError(
+            f"unknown prior {name!r}; valid priors: "
+            f"{', '.join(sorted(_PRIORS))} (side information selects "
+            "the macau prior automatically)")
+    return _PRIORS[name](num_latent)
 
 
 class TrainSession:
@@ -112,7 +122,8 @@ class TrainSession:
                     beta_precision=self._beta_precision,
                     sample_beta_precision=self._sample_beta_precision)
             else:
-                prior = _PRIORS[self.prior_names[axis]](self.num_latent)
+                prior = _prior_by_name(self.prior_names[axis],
+                                       self.num_latent)
             ents.append(EntityDef(name, n, prior))
         sparse = isinstance(self._train, SparseMatrix)
         model = ModelDef(tuple(ents),
@@ -173,12 +184,18 @@ class GFASession:
     views: list of (N, D_m) dense arrays.  The shared entity gets a
     Normal prior; each view's loading matrix gets the spike-and-slab
     prior (paper Table 1, GFA row: "Normal + SnS").
+
+    Pass ``mesh`` to run the chain through the explicit distributed
+    sweep (``make_distributed_step``): the spike-and-slab coordinate
+    updates are counter-based per global row, so the sharded chain
+    matches this single-device one at reduction-order tolerance — GFA
+    is in the sharded subset, not on a pjit fallback.
     """
 
     def __init__(self, views: Sequence[np.ndarray], num_latent: int = 8,
                  burnin: int = 200, nsamples: int = 200, seed: int = 0,
                  noise: Any = None, use_pallas: bool = False,
-                 zero_init_loadings: bool = True):
+                 zero_init_loadings: bool = True, mesh: Any = None):
         self.views = [np.asarray(v, np.float32) for v in views]
         self.num_latent = num_latent
         self.burnin = burnin
@@ -192,6 +209,7 @@ class GFASession:
         # into (the GFA rotation degeneracy; R's CCAGFA needs an
         # explicit rotation-optimization step for the same reason).
         self.zero_init_loadings = zero_init_loadings
+        self.mesh = mesh
 
     def _build(self) -> Tuple[ModelDef, MFData]:
         N = self.views[0].shape[0]
@@ -219,6 +237,27 @@ class GFASession:
             for e in range(1, len(fs)):
                 fs[e] = jnp.zeros_like(fs[e])
             state = state._replace(factors=tuple(fs))
+        if self.mesh is not None:
+            from .distributed import (distributed_supported,
+                                      make_distributed_step)
+            if not distributed_supported(model, self.mesh, data):
+                # every view dim (and N) must divide the shard count —
+                # otherwise make_distributed_step would silently hand
+                # back the pjit fallback this session layer promises
+                # to avoid
+                import warnings
+                warnings.warn(
+                    "GFA model is outside the sharded subset on this "
+                    "mesh (entity dims must divide the shard count); "
+                    "falling back to auto-partitioned pjit",
+                    stacklevel=2)
+            step, ds, ss = make_distributed_step(model, self.mesh,
+                                                 data, state)
+            data = jax.device_put(data, ds)
+            state = jax.device_put(state, ss)
+        else:
+            def step(d, s):
+                return gibbs_step(model, d, s)
         t0 = time.perf_counter()
         train_traces: List[List[float]] = [[] for _ in self.views]
         # posterior means of Z and the W_m
@@ -226,7 +265,7 @@ class GFASession:
                 for e in model.entities]
         n_acc = 0
         for sweep in range(self.burnin + self.nsamples):
-            state, metrics = gibbs_step(model, data, state)
+            state, metrics = step(data, state)
             for m in range(len(self.views)):
                 train_traces[m].append(float(metrics[f"rmse_train_{m}"]))
             if sweep >= self.burnin:

@@ -11,10 +11,13 @@ magnitude under a Gibbs chain's own step-to-step movement.
 
 The same contract and tolerance cover the widened sharded subset:
 probit noise (counter-based ``row_uniforms`` truncated-normal
-augmentation) and dense blocks (row-sharded stored orientations), and
-the HLO checks pin one fixed-factor all-gather per half-sweep for
-those paths too, plus ZERO per-sweep Macau ``FtF`` psums (the (D, D)
-side-Gramian is hoisted to placement time).
+augmentation), dense blocks (row-sharded stored orientations), and
+spike-and-slab priors (counter-based ``row_bernoulli`` inclusions +
+per-component-folded slab normals — the GFA composition), and the HLO
+checks pin one fixed-factor all-gather per half-sweep for those paths
+too, plus ZERO per-sweep Macau ``FtF`` psums (the (D, D) side-Gramian
+is hoisted to placement time) and ZERO per-component SnS collectives
+(two K-sized hyper psums per view are the entire SnS budget).
 
 Runs in subprocesses because the device count must be set before jax
 initializes (the main pytest process keeps the default 1 CPU device).
@@ -171,6 +174,172 @@ _WIDENED_PARITY_SCRIPT = textwrap.dedent("""
     m = (rng.random((n_rows, n_cols)) < 0.6).astype(np.float32)
     parity("dense_masked_probit", two_entity(ProbitNoise(), False),
            MFData((dense_block(Xb, mask=m),), (None, None)))
+    print("OK")
+""")
+
+_SNS_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (AdaptiveGaussian, FixedGaussian, MFData,
+                            dense_block, init_state, gibbs_step)
+    from repro.core.blocks import BlockDef, EntityDef, ModelDef
+    from repro.core.gibbs import row_bernoulli
+    from repro.core.distributed import (distributed_supported,
+                                        make_distributed_step)
+    from repro.core.priors import (FixedNormalPrior, NormalPrior,
+                                   SpikeAndSlabPrior)
+    from repro.core.sparse import random_sparse
+    from repro.launch.mesh import make_mesh
+
+    # the mechanism: SnS inclusion draws are bitwise shard slices,
+    # the same counter-based contract as row_normals/row_uniforms
+    key = jax.random.PRNGKey(7)
+    p = jnp.asarray(np.random.default_rng(0).random(96), jnp.float32)
+    full = np.asarray(jax.jit(lambda: row_bernoulli(key, p, 0))())
+    for s in range(8):
+        part = np.asarray(jax.jit(
+            lambda s=s: row_bernoulli(key, p[12 * s:12 * (s + 1)],
+                                      jnp.int32(12 * s)))())
+        assert np.array_equal(part, full[12 * s:12 * (s + 1)]), s
+    print("row bernoulli bitwise")
+
+    K = 4
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+
+    def parity(name, model, data, check_sns_hypers):
+        state = init_state(model, data, seed=0)
+        st1 = state
+        for _ in range(3):
+            st1, m1 = gibbs_step(model, data, st1)
+        assert distributed_supported(model, mesh, data), name
+        step, ds, ss = make_distributed_step(model, mesh, data, state)
+        st2 = jax.device_put(state, ss)
+        pdata = jax.device_put(data, ds)
+        for _ in range(3):
+            st2, m2 = step(pdata, st2)
+        for a, b in zip(st1.factors, st2.factors):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(float(m1["rmse_train_0"]),
+                                   float(m2["rmse_train_0"]), rtol=1e-3)
+        # the replicated rho/tau hyper-state is the single-device one
+        for e in check_sns_hypers:
+            for hk in ("rho", "tau"):
+                np.testing.assert_allclose(
+                    np.asarray(st1.hypers[e][hk]),
+                    np.asarray(st2.hypers[e][hk]), rtol=2e-3, atol=2e-3)
+        print(name, "parity ok", float(m2["rmse_train_0"]))
+        return st2
+
+    # the GFA composition (paper Table 1 "Normal + SnS"): shared Z
+    # against 3 dense views, spike-and-slab loadings; every dim
+    # divides BOTH the 8-device mesh and the 6-survivor re-mesh
+    N, dims = 96, (72, 48, 24)
+    Z = rng.normal(size=(N, K)).astype(np.float32)
+    ents = [EntityDef("samples", N, FixedNormalPrior(K))]
+    blocks, payloads = [], []
+    for m, D in enumerate(dims):
+        W = rng.normal(size=(D, K)).astype(np.float32)
+        X = (Z @ W.T + 0.1 * rng.normal(size=(N, D))).astype(np.float32)
+        ents.append(EntityDef(f"view{m}", D, SpikeAndSlabPrior(K)))
+        blocks.append(BlockDef(0, m + 1, AdaptiveGaussian(),
+                               sparse=False))
+        payloads.append(dense_block(X))
+    gfa_model = ModelDef(tuple(ents), tuple(blocks), K, False)
+    gfa_data = MFData(tuple(payloads), tuple([None] * len(ents)))
+    st = parity("gfa", gfa_model, gfa_data,
+                check_sns_hypers=range(1, len(ents)))
+
+    # elastic shrink carrying the rho/tau hyper-state: 8 -> 6 devices
+    mesh6 = make_mesh((6,), ("data",))
+    assert distributed_supported(gfa_model, mesh6, gfa_data)
+    state0 = init_state(gfa_model, gfa_data, seed=0)
+    step6, ds6, ss6 = make_distributed_step(gfa_model, mesh6, gfa_data,
+                                            state0)
+    st6, m6 = step6(jax.device_put(gfa_data, ds6),
+                    jax.device_put(st, ss6))
+    ref = state0
+    for _ in range(4):
+        ref, mref = gibbs_step(gfa_model, gfa_data, ref)
+    np.testing.assert_allclose(float(mref["rmse_train_0"]),
+                               float(m6["rmse_train_0"]), rtol=1e-3)
+    print("gfa elastic remesh ok")
+
+    # SnS on one axis of a sparse block (BMF + SnS, Table 1)
+    smat, _, _ = random_sparse(0, (96, 48), 0.2, rank=4)
+    sns_model = ModelDef(
+        (EntityDef("r", 96, NormalPrior(K)),
+         EntityDef("c", 48, SpikeAndSlabPrior(K))),
+        (BlockDef(0, 1, FixedGaussian(5.0), sparse=True),), K, False)
+    parity("sparse_sns", sns_model, MFData((smat,), (None, None)),
+           check_sns_hypers=(1,))
+    print("OK")
+""")
+
+_HLO_SNS_SCRIPT = textwrap.dedent("""
+    import os, re
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+
+    from repro.core import (AdaptiveGaussian, MFData, dense_block,
+                            init_state)
+    from repro.core.blocks import BlockDef, EntityDef, ModelDef
+    from repro.core.distributed import (distributed_supported,
+                                        make_distributed_step)
+    from repro.core.priors import FixedNormalPrior, SpikeAndSlabPrior
+    from repro.launch.mesh import make_mesh
+
+    K = 8
+    N, dims = 96, (48, 24)
+    mesh = make_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    ents = [EntityDef("samples", N, FixedNormalPrior(K))]
+    blocks, payloads = [], []
+    for m, D in enumerate(dims):
+        X = rng.normal(size=(N, D)).astype(np.float32)
+        ents.append(EntityDef(f"view{m}", D, SpikeAndSlabPrior(K)))
+        blocks.append(BlockDef(0, m + 1, AdaptiveGaussian(),
+                               sparse=False))
+        payloads.append(dense_block(X))
+    model = ModelDef(tuple(ents), tuple(blocks), K, False)
+    data = MFData(tuple(payloads), tuple([None] * len(ents)))
+    assert distributed_supported(model, mesh, data)
+    state = init_state(model, data, seed=0)
+    step, ds, ss = make_distributed_step(model, mesh, data, state)
+    lowered = step.lower(data, state)
+    txt = lowered.as_text()
+
+    # ONE fixed-factor all-gather per half-sweep: each entity's factor
+    # is gathered exactly once per sweep (E entities -> E gathers)
+    sh = [l for l in txt.splitlines() if "stablehlo.all_gather" in l]
+    assert len(sh) == len(model.entities), sh
+
+    # hyper/noise psums only: 2 K-sized SnS moments per view + 2
+    # scalar SSE/nnz per block.  The coordinate loop runs K unrolled
+    # iterations — a single per-component psum would add ~K more.
+    M = len(dims)
+    n_ar = txt.count("stablehlo.all_reduce")
+    assert n_ar == 4 * M, (n_ar, M)
+
+    # and every collective payload on the backend is at most K-sized
+    # (the all-gathered factors are consumed, not reduced)
+    ctxt = lowered.compile().as_text()
+    for line in ctxt.splitlines():
+        if "all-reduce(" not in line and "all-reduce-start(" not in line:
+            continue
+        for shp in re.findall(r"f32\\[([\\d,]*)\\]", line):
+            n_el = int(np.prod([int(d) for d in shp.split(",") if d]
+                               or [1]))
+            assert n_el <= K * K, (n_el, line)
+    ags = re.findall(r"all-gather(?:-start)?\\(", ctxt)
+    assert len(ags) == len(model.entities), len(ags)
+    print("all-gathers", len(ags), "all-reduces", n_ar)
     print("OK")
 """)
 
@@ -335,3 +504,19 @@ def test_distributed_hlo_widened_paths_and_ftf_hoist():
     """One all-gather per half-sweep holds for probit/dense/Macau, and
     the Macau side-Gramian psum is gone from the per-sweep program."""
     _run(_HLO_WIDENED_SCRIPT)
+
+
+@pytest.mark.slow
+def test_distributed_sns_gfa_matches_single_device():
+    """Spike-and-slab (GFA multi-view + sparse BMF+SnS) rides the
+    explicit sweep at the same 2e-4 parity, carries replicated rho/tau
+    hyper-state, and survives an 8 -> 6 re-mesh mid-chain."""
+    _run(_SNS_PARITY_SCRIPT)
+
+
+@pytest.mark.slow
+def test_distributed_hlo_sns_collective_contract():
+    """GFA HLO: one fixed-factor all-gather per half-sweep, exactly
+    two K-sized hyper psums per SnS view plus the scalar noise psums,
+    and ZERO per-component collectives."""
+    _run(_HLO_SNS_SCRIPT)

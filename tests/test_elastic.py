@@ -113,6 +113,97 @@ _ELASTIC_SCRIPT = textwrap.dedent("""
 """)
 
 
+_ELASTIC_SNS_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core import (AdaptiveGaussian, MFData, dense_block,
+                            init_state, gibbs_step)
+    from repro.core.blocks import BlockDef, EntityDef, ModelDef
+    from repro.core.distributed import (distributed_supported,
+                                        make_distributed_step)
+    from repro.core.priors import FixedNormalPrior, SpikeAndSlabPrior
+    from repro.runtime.fault import ElasticMesh, FailureSim
+
+    # GFA (Normal + SnS): every entity dim divides both the 8-device
+    # mesh and the 6-survivor re-mesh
+    K, N, dims = 4, 96, (72, 24)
+    rng = np.random.default_rng(0)
+    Z = rng.normal(size=(N, K)).astype(np.float32)
+    ents = [EntityDef("samples", N, FixedNormalPrior(K))]
+    blocks, payloads = [], []
+    for m, D in enumerate(dims):
+        W = rng.normal(size=(D, K)).astype(np.float32)
+        X = (Z @ W.T + 0.1 * rng.normal(size=(N, D))).astype(np.float32)
+        ents.append(EntityDef(f"view{m}", D, SpikeAndSlabPrior(K)))
+        blocks.append(BlockDef(0, m + 1, AdaptiveGaussian(),
+                               sparse=False))
+        payloads.append(dense_block(X))
+    model = ModelDef(tuple(ents), tuple(blocks), K, False)
+    data = MFData(tuple(payloads), tuple([None] * len(ents)))
+    state0 = init_state(model, data, seed=0)
+
+    TOTAL, FAIL_AT = 4, 2
+    ref = state0
+    for _ in range(TOTAL):
+        ref, mref = gibbs_step(model, data, ref)
+
+    ckpt = CheckpointManager(tempfile.mkdtemp(), keep=2)
+    sim = FailureSim(fail_at=[FAIL_AT], lose_devices=2)
+    elastic = ElasticMesh(model_parallel=1)
+    devices = list(jax.devices())
+
+    mesh = elastic.build(devices)
+    assert distributed_supported(model, mesh, data)
+    step, ds, ss = make_distributed_step(model, mesh, data, state0)
+    pdata = jax.device_put(data, ds)
+    st = jax.device_put(state0, ss)
+
+    sweep, resumed_on = 0, None
+    while sweep < TOTAL:
+        try:
+            sim.check(sweep)
+            st, m = step(pdata, st)
+            sweep += 1
+            ckpt.save(sweep, st, blocking=True)
+        except FailureSim.DeviceLost:
+            devices = devices[:len(devices) - sim.lose]
+            mesh = elastic.build(devices)
+            assert mesh.devices.size == 6
+            assert distributed_supported(model, mesh, data)
+            step, ds, ss = make_distributed_step(model, mesh, data,
+                                                 state0)
+            pdata = jax.device_put(data, ds)
+            restored = ckpt.restore_latest(state0)
+            assert restored is not None, "no complete checkpoint"
+            sweep, host_state = restored
+            resumed_on = sweep
+            st = jax.device_put(host_state, ss)
+
+    assert sim.failures == 1 and resumed_on == FAIL_AT
+    assert int(st.step) == TOTAL
+
+    # factors AND the SnS rho/tau hyper-state ride the npz round-trip
+    # + re-mesh and land back on the single-device chain
+    for a, b in zip(ref.factors, st.factors):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+    for e in range(1, len(ents)):
+        for hk in ("rho", "tau"):
+            np.testing.assert_allclose(
+                np.asarray(ref.hypers[e][hk]),
+                np.asarray(st.hypers[e][hk]), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(float(mref["rmse_train_0"]),
+                               float(m["rmse_train_0"]), rtol=1e-3)
+    print("resumed on sweep", resumed_on, "final rmse",
+          float(m["rmse_train_0"]))
+    print("OK")
+""")
+
+
 def _run(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
@@ -127,3 +218,11 @@ def _run(script):
 @pytest.mark.slow
 def test_elastic_checkpoint_remesh_roundtrip():
     _run(_ELASTIC_SCRIPT)
+
+
+@pytest.mark.slow
+def test_elastic_sns_hyper_state_roundtrip():
+    """The GFA chain (spike-and-slab rho/tau hyper-state) checkpoints
+    to disk, re-meshes 8 -> 6, restores, and rejoins the single-device
+    chain at the same 2e-4 tolerance."""
+    _run(_ELASTIC_SNS_SCRIPT)

@@ -5,8 +5,11 @@ device, batched == loop); none of them notices if a refactor changes
 the RNG consumption order and silently produces a different — equally
 valid-looking — chain, which would invalidate every stored checkpoint
 and reproducibility claim.  This locks the 3-sweep RMSE/alpha
-trajectories of one Gaussian and one probit model on a fixed seed into
-``results/golden_chains.json``.
+trajectories of one Gaussian, one probit, and one GFA (spike-and-slab)
+model on a fixed seed into ``results/golden_chains.json``.  The GFA
+chain pins the counter-based SnS draw order (``row_bernoulli`` +
+per-component-folded ``row_normals``) that the distributed sweep's
+shard slices are defined against.
 
 Tolerance: 1e-3 relative.  XLA reduction-order drift across versions
 measures ~1e-6..1e-5 on these trajectories; a changed draw sequence
@@ -20,9 +23,10 @@ import os
 
 import numpy as np
 
-from repro.core import (AdaptiveGaussian, BlockDef, EntityDef, MFData,
-                        ModelDef, NormalPrior, ProbitNoise, gibbs_step,
-                        init_state)
+from repro.core import (AdaptiveGaussian, BlockDef, EntityDef,
+                        FixedNormalPrior, MFData, ModelDef, NormalPrior,
+                        ProbitNoise, SpikeAndSlabPrior, dense_block,
+                        gibbs_step, init_state)
 from repro.core.sparse import random_sparse
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -33,6 +37,8 @@ SEED = 11
 
 def _chain(name):
     K = 4
+    if name == "gfa":
+        return _gfa_chain(K)
     n_rows, n_cols = 48, 32
     binary = name == "probit"
     mat, _, _ = random_sparse(SEED, (n_rows, n_cols), 0.3, rank=3,
@@ -51,8 +57,34 @@ def _chain(name):
     return {"rmse_train": rmse, "alpha": alpha}
 
 
+def _gfa_chain(K):
+    """GFA (FixedNormal Z + SnS loadings, two dense views): pins the
+    counter-based spike-and-slab draw order."""
+    rng = np.random.default_rng(SEED)
+    N, dims = 48, (16, 12)
+    Z = rng.normal(size=(N, K)).astype(np.float32)
+    ents = [EntityDef("samples", N, FixedNormalPrior(K))]
+    blocks, payloads = [], []
+    for m, D in enumerate(dims):
+        W = rng.normal(size=(D, K)).astype(np.float32)
+        X = (Z @ W.T + 0.1 * rng.normal(size=(N, D))).astype(np.float32)
+        ents.append(EntityDef(f"view{m}", D, SpikeAndSlabPrior(K)))
+        blocks.append(BlockDef(0, m + 1, AdaptiveGaussian(),
+                               sparse=False))
+        payloads.append(dense_block(X))
+    model = ModelDef(tuple(ents), tuple(blocks), K, False)
+    data = MFData(tuple(payloads), tuple([None] * len(ents)))
+    state = init_state(model, data, seed=SEED)
+    rmse, alpha = [], []
+    for _ in range(SWEEPS):
+        state, metrics = gibbs_step(model, data, state)
+        rmse.append(float(metrics["rmse_train_0"]))
+        alpha.append(float(metrics["alpha_0"]))
+    return {"rmse_train": rmse, "alpha": alpha}
+
+
 def _run_all():
-    return {name: _chain(name) for name in ("gaussian", "probit")}
+    return {name: _chain(name) for name in ("gaussian", "probit", "gfa")}
 
 
 def test_golden_chain_trajectories():

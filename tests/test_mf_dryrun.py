@@ -100,3 +100,41 @@ def test_widened_cells_build_their_workloads():
             lambda d, s, m=model: gibbs_step(m, d, s), data, state)
         assert st1.factors[0].shape == (cell.n_rows, cell.K)
         assert "rmse_train_0" in metrics
+
+
+def test_gfa_cell_builds_multiview_sns_workload():
+    """The gfa_views cell composes FixedNormal Z + spike-and-slab
+    loadings over 3 dense views — and sits in the sharded subset on
+    the production mesh shape (structural check; the real 256-chip
+    lower/compile lives in the dry-run CLI, JSON under
+    results/dryrun/)."""
+    from repro.core.priors import FixedNormalPrior, SpikeAndSlabPrior
+
+    cell = CELLS["gfa_views"]
+    model = build_model(cell, "baseline")
+    assert isinstance(model.entities[0].prior, FixedNormalPrior)
+    assert len(model.entities) == 1 + len(cell.gfa_dims)
+    for ent in model.entities[1:]:
+        assert isinstance(ent.prior, SpikeAndSlabPrior)
+    assert len(model.blocks) == len(cell.gfa_dims)
+    data = abstract_data(cell)
+    for blk, D in zip(data.blocks, cell.gfa_dims):
+        assert isinstance(blk, DenseBlock) and blk.fully
+        assert blk.X.shape == (cell.n_rows, D)
+        assert blk.XT.shape == (D, cell.n_rows)
+    # 512-shard divisibility: every entity (samples AND each view)
+    assert cell.n_rows % 512 == 0
+    for D in cell.gfa_dims:
+        assert D % 512 == 0
+
+    # a full sweep traces abstractly at production size
+    state = jax.eval_shape(lambda: init_state(model, data, 0))
+    st1, metrics = jax.eval_shape(
+        lambda d, s: gibbs_step(model, d, s), data, state)
+    assert st1.factors[0].shape == (cell.n_rows, cell.K)
+    for m in range(len(cell.gfa_dims)):
+        assert f"rmse_train_{m}" in metrics
+    # the rho/tau hyper-state rides the sweep for every view entity
+    for h in st1.hypers[1:]:
+        assert set(h) == {"rho", "tau"}
+        assert h["rho"].shape == (cell.K,)

@@ -118,3 +118,49 @@ def test_probit_augment_batch_shape_independent():
     z16, _ = n.augment(key, st, pred, vals, mask)
     z4, _ = n.augment(key, st, pred[:4], vals[:4], mask[:4])
     np.testing.assert_array_equal(np.asarray(z4), np.asarray(z16)[:4])
+
+
+def test_adaptive_gaussian_empty_block_keeps_alpha():
+    """An all-masked block (nnz == 0, e.g. a fully padded shard view)
+    has no residuals: the alpha draw from the data-free Gamma
+    conditional is degenerate, so the previous alpha is kept — and it
+    must never go NaN."""
+    n = AdaptiveGaussian(sn_init=2.5)
+    st = n.init()
+    vals = jnp.ones((4, 3))
+    pred = jnp.zeros_like(vals)
+    zero_mask = jnp.zeros_like(vals)
+    st1 = n.sample_state(jax.random.PRNGKey(0), st, pred, vals,
+                         zero_mask)
+    assert float(st1["alpha"]) == 2.5
+    # the psummed override path the distributed sweep uses
+    st2 = n.sample_state(jax.random.PRNGKey(0), st, pred, vals,
+                         zero_mask, sse=jnp.asarray(0.0),
+                         nnz=jnp.asarray(0.0))
+    assert float(st2["alpha"]) == 2.5
+    # with observations the draw still moves
+    st3 = n.sample_state(jax.random.PRNGKey(0), st, pred, vals,
+                         jnp.ones_like(vals))
+    assert np.isfinite(float(st3["alpha"])) and float(st3["alpha"]) != 2.5
+
+
+def test_empty_block_sweep_stays_finite():
+    """A full gibbs_step over an all-masked dense block: factors fall
+    back to the prior, alpha holds, and the rmse metric reports 0
+    instead of 0/0 -> NaN."""
+    from repro.core import (BlockDef, EntityDef, MFData, ModelDef,
+                            NormalPrior, dense_block, gibbs_step,
+                            init_state)
+    X = np.ones((8, 6), np.float32)
+    blk = dense_block(X, mask=np.zeros_like(X))
+    model = ModelDef((EntityDef("r", 8, NormalPrior(3)),
+                      EntityDef("c", 6, NormalPrior(3))),
+                     (BlockDef(0, 1, AdaptiveGaussian(), sparse=False),),
+                     3, False)
+    data = MFData((blk,), (None, None))
+    state = init_state(model, data, 0)
+    state, metrics = gibbs_step(model, data, state)
+    for f in state.factors:
+        assert bool(jnp.all(jnp.isfinite(f)))
+    assert float(metrics["rmse_train_0"]) == 0.0
+    assert np.isfinite(float(metrics["alpha_0"]))

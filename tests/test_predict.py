@@ -1,0 +1,76 @@
+"""Posterior-predictive evaluation: the AUC tie handling regression.
+
+Rank-sum AUC with raw ``argsort`` ranks assigns tied predictions an
+arbitrary input-order permutation; on discrete/probit outputs (where
+ties are the common case) that biases the statistic by up to the tied
+mass.  ``predict.auc`` uses MIDRANKS: every tied positive/negative
+pair contributes exactly 1/2, matching the trapezoidal ROC area and
+the pairwise definition
+
+    AUC = ( #(p_pos > p_neg) + 0.5 #(p_pos == p_neg) ) / (n_pos n_neg)
+
+which is the brute-force oracle used below.
+"""
+import numpy as np
+
+from repro.core.predict import auc
+
+
+def _auc_pairwise(pred, truth, threshold=0.5):
+    """O(n^2) oracle: pairwise wins + half-credit for ties."""
+    pos = np.asarray(truth) > threshold
+    p, n = pred[pos], pred[~pos]
+    wins = (p[:, None] > n[None, :]).sum()
+    ties = (p[:, None] == n[None, :]).sum()
+    return (wins + 0.5 * ties) / (len(p) * len(n))
+
+
+def test_auc_all_tied_is_half():
+    """Constant predictions carry no information: AUC must be exactly
+    0.5, not an artifact of the argsort permutation."""
+    truth = np.array([1, 0, 1, 0, 0, 1, 0, 1], np.float32)
+    pred = np.zeros_like(truth)
+    assert auc(pred, truth) == 0.5
+
+
+def test_auc_heavy_ties_matches_pairwise_oracle():
+    """Probit-style discrete predictions (few distinct values, heavy
+    ties) agree with the brute-force pairwise definition."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        n = int(rng.integers(10, 120))
+        # few distinct levels -> most comparisons are ties
+        pred = rng.integers(0, 4, size=n).astype(np.float32) / 4.0
+        truth = (rng.random(n) < 0.5).astype(np.float32)
+        if truth.min() == truth.max():
+            continue
+        np.testing.assert_allclose(auc(pred, truth),
+                                   _auc_pairwise(pred, truth),
+                                   atol=1e-12)
+
+
+def test_auc_tie_free_unchanged():
+    """Without ties the midrank formula reduces to the classic
+    rank-sum statistic."""
+    rng = np.random.default_rng(1)
+    pred = rng.permutation(np.linspace(0.0, 1.0, 50)).astype(np.float32)
+    truth = (rng.random(50) < 0.4).astype(np.float32)
+    np.testing.assert_allclose(auc(pred, truth),
+                               _auc_pairwise(pred, truth), atol=1e-12)
+
+
+def test_auc_input_order_invariant_under_ties():
+    """The regression itself: permuting tied entries must not move the
+    AUC (raw argsort ranks did)."""
+    pred = np.array([0.2, 0.2, 0.2, 0.8, 0.8, 0.8], np.float32)
+    truth = np.array([1, 0, 0, 1, 1, 0], np.float32)
+    base = auc(pred, truth)
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        perm = rng.permutation(len(pred))
+        assert auc(pred[perm], truth[perm]) == base
+
+
+def test_auc_degenerate_classes_nan():
+    assert np.isnan(auc(np.array([0.1, 0.9]), np.array([1.0, 1.0])))
+    assert np.isnan(auc(np.array([0.1, 0.9]), np.array([0.0, 0.0])))

@@ -112,3 +112,23 @@ def test_sns_hyper_estimates_sparsity():
     # tau ~ 1 (unit slab variance); the rarely-included component has
     # few samples, so its posterior draw is noisy
     np.testing.assert_allclose(np.asarray(h["tau"]), 1.0, rtol=0.35)
+
+
+def test_sns_distributed_moments_match():
+    """Passing psummed per-component moments equals the local
+    computation — the SnS sibling of the NormalPrior moments test,
+    backing the two K-sized psums the distributed sweep issues."""
+    rng = np.random.default_rng(6)
+    N, K = 200, 4
+    s = rng.random((N, K)) < 0.6
+    F = jnp.asarray((s * rng.normal(size=(N, K))).astype(np.float32))
+    prior = SpikeAndSlabPrior(K)
+    h0 = prior.init(jax.random.PRNGKey(0), N)
+    key = jax.random.PRNGKey(42)
+    a = prior.sample_hyper(key, F, h0)
+    incl = (jnp.abs(F) > 0).astype(jnp.float32)
+    b = prior.sample_hyper_moments(key, h0, n_incl=incl.sum(axis=0),
+                                   sumsq=(F * F).sum(axis=0), n_rows=N)
+    for hk in ("rho", "tau"):
+        np.testing.assert_allclose(np.asarray(a[hk]), np.asarray(b[hk]),
+                                   rtol=1e-5, atol=1e-6)

@@ -15,7 +15,10 @@ Invariants covered:
   * the probit truncated-normal machinery: _truncnorm draws carry the
     observation's sign and stay finite for |mean| up to 8, and the
     counter-based row_uniforms (the distributed probit contract) give
-    bitwise shard-slice parity for every divisor split.
+    bitwise shard-slice parity for every divisor split;
+  * the counter-based row_bernoulli (the spike-and-slab inclusion
+    contract) gives the same bitwise shard-slice parity and tracks
+    its probability argument.
 """
 import jax
 import jax.numpy as jnp
@@ -28,7 +31,8 @@ except ImportError:   # container without dev deps — see requirements-dev.txt
 from repro.core import (AdaptiveGaussian, BlockDef, EntityDef,
                         FixedGaussian, MFData, ModelDef, NormalPrior,
                         ProbitNoise, from_coo, gibbs_step, init_state)
-from repro.core.gibbs import _sparse_contrib, row_uniforms
+from repro.core.gibbs import (_sparse_contrib, row_bernoulli,
+                              row_uniforms)
 from repro.core.noise import _truncnorm
 from repro.kernels import ref
 
@@ -211,6 +215,38 @@ def test_row_uniforms_shard_slices_bitwise(n_shards, width, seed):
         np.testing.assert_array_equal(part,
                                       full[rows_per * s:
                                            rows_per * (s + 1)])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 2**31 - 1), st.booleans())
+def test_row_bernoulli_shard_slices_bitwise(n_shards, seed, wide):
+    """Counter-based Bernoulli (the SnS inclusion indicators): a shard
+    holding rows [off, off+n) draws EXACTLY the bits of the full
+    draw's slice, for (n_rows,) and (n_rows, W) probability shapes —
+    the sibling of the row_normals/row_uniforms contracts that admits
+    spike-and-slab into the distributed sweep."""
+    rng = np.random.default_rng(seed)
+    rows_per = 6
+    n_rows = n_shards * rows_per
+    shape = (n_rows, 3) if wide else (n_rows,)
+    p = jnp.asarray(rng.random(shape), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    full = np.asarray(row_bernoulli(key, p))
+    assert full.dtype == bool and full.shape == shape
+    for s in range(n_shards):
+        sl = slice(rows_per * s, rows_per * (s + 1))
+        part = np.asarray(row_bernoulli(key, p[sl],
+                                        row_offset=rows_per * s))
+        np.testing.assert_array_equal(part, full[sl])
+
+
+def test_row_bernoulli_tracks_probability():
+    """Statistical sanity: the inclusion rate follows p."""
+    key = jax.random.PRNGKey(0)
+    for p in (0.1, 0.5, 0.9):
+        draws = np.asarray(row_bernoulli(
+            key, jnp.full((20000,), p, jnp.float32)))
+        assert abs(draws.mean() - p) < 0.02, (p, draws.mean())
 
 
 @settings(max_examples=10, deadline=None)

@@ -127,3 +127,61 @@ def test_reproducible_same_seed():
     c = smurff(mat, test=test, num_latent=4, burnin=10, nsamples=10,
                seed=8)
     assert a.rmse_test != c.rmse_test
+
+
+def test_prior_registry_names():
+    """Every named prior builds; unknown names raise a ValueError that
+    lists the valid choices (not a bare KeyError)."""
+    from repro.core.priors import (FixedNormalPrior, NormalPrior,
+                                   SpikeAndSlabPrior)
+    mat, test, _ = _planted(n=16, m=8, density=0.5)
+    for name, cls in (("normal", NormalPrior),
+                      ("spikeandslab", SpikeAndSlabPrior),
+                      ("fixednormal", FixedNormalPrior)):
+        sess = TrainSession(num_latent=3, priors=(name, "normal"))
+        sess.add_train_and_test(mat)
+        model, _ = sess._build()
+        assert isinstance(model.entities[0].prior, cls), name
+
+    sess = TrainSession(num_latent=3, priors=("bogus", "normal"))
+    sess.add_train_and_test(mat)
+    with pytest.raises(ValueError) as ei:
+        sess._build()
+    msg = str(ei.value)
+    assert "bogus" in msg
+    for name in ("normal", "spikeandslab", "fixednormal"):
+        assert name in msg
+
+
+def test_dense_all_ones_mask_fast_path():
+    """dense_block with an explicit all-ones mask takes the fully-
+    observed shared-Gram path and produces the IDENTICAL sweep to the
+    mask=None construction."""
+    from repro.core import (BlockDef, EntityDef, MFData, ModelDef,
+                            NormalPrior, dense_block, gibbs_step,
+                            init_state)
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(24, 12)).astype(np.float32)
+    a = dense_block(X)
+    b = dense_block(X, mask=np.ones_like(X))
+    assert a.fully and b.fully
+
+    model = ModelDef((EntityDef("r", 24, NormalPrior(3)),
+                      EntityDef("c", 12, NormalPrior(3))),
+                     (BlockDef(0, 1, FixedGaussian(10.0), sparse=False),),
+                     3, False)
+    outs = []
+    for blk in (a, b):
+        data = MFData((blk,), (None, None))
+        state = init_state(model, data, 0)
+        for _ in range(2):
+            state, metrics = gibbs_step(model, data, state)
+        outs.append((state, metrics))
+    for fa, fb in zip(outs[0][0].factors, outs[1][0].factors):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    assert float(outs[0][1]["rmse_train_0"]) == \
+        float(outs[1][1]["rmse_train_0"])
+    # a genuinely masked block still takes the per-row path
+    m = np.ones_like(X)
+    m[0, 0] = 0.0
+    assert not dense_block(X, mask=m).fully
