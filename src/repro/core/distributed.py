@@ -7,13 +7,36 @@ over the production mesh (``compat.shard_map`` — version-portable):
 * rows of every factor (and the corresponding padded-CSR block rows)
   are sharded over all mesh axes flattened — the MF analogue of the
   paper's parallel-for over users/movies, but across chips;
-* the *fixed* factor of each half-sweep is needed dense on every chip:
-  the sweep issues exactly ONE explicit ``all_gather`` per half-sweep
-  for it (bf16 when ``ModelDef.bf16_gather`` — cast BEFORE the
-  collective, halving the wire bytes), matching the GASPI
-  implementation's communication pattern (Vander Aa et al. 2017);
-  the gather of the final factor is reused for the residual metrics,
-  so a sweep over E entities moves exactly E gathers;
+* the *fixed* factor of each half-sweep is needed (in full) by every
+  chip.  HOW it travels is the ``pipeline`` knob of
+  ``make_distributed_step`` (default from the ``REPRO_PIPELINE``
+  environment variable, else ``"eager"``):
+
+  - ``"eager"``: exactly ONE explicit ``all_gather`` per half-sweep
+    (bf16 when ``ModelDef.bf16_gather`` — cast BEFORE the collective,
+    halving the wire bytes), matching the GASPI implementation's
+    communication pattern (Vander Aa et al. 2017); the gather of the
+    final factor is reused for the residual metrics, so a sweep over
+    E entities moves exactly E gathers;
+  - ``"ring"``: the same bytes travel as ``n_shards - 1``
+    ``lax.ppermute`` hops around the flattened mesh ring
+    (``_ring_accumulate``) — ZERO all-gathers in the program, and the
+    hop for chunk t+1 is issued before chunk t is consumed, so the
+    wire transfer overlaps the local math (the asynchronous /
+    limited-communication BMF exchange of arXiv:1705.10633 and
+    arXiv:2004.02561).  Dense non-probit blocks of the earlier
+    half-sweep consume the circulating chunks directly through
+    chunk-accumulated Gram/RHS moments (``gibbs._dense_chunk_contrib``)
+    and never materialize the dense fixed view at all; every other
+    consumer (padded-CSR gathers, probit's pred-dependent
+    augmentation, the SnS coordinate loop, end-of-sweep metrics)
+    reassembles the view from the chunks by ``dynamic_update_slice``
+    — bitwise the all-gathered array, so those chains are
+    draw-for-draw the eager chains.  Ring-vs-eager parity and the
+    collective-permute/no-all-gather HLO contract are pinned in
+    ``tests/test_distributed.py``; the overlap-aware exchange term is
+    modeled in ``launch/mf_dryrun.py`` (eager stays the default until
+    that term wins on the target).
 * the Normal-Wishart hyper-sample needs global factor moments: those
   reduce over the row shards with K- and K^2-sized ``psum`` payloads
   (D-sized for the Macau link terms) and are then resampled as an
@@ -64,6 +87,7 @@ slice.  This gives perfect load balance by construction (padded rows).
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import Optional, Tuple
 
@@ -74,7 +98,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import compat
 from .blocks import DenseBlock, ModelDef
-from .gibbs import (MFData, MFState, _dense_contrib,
+from .gibbs import (MFData, MFState, _dense_chunk_contrib, _dense_contrib,
                     _sample_normal_factor, _sample_sns_factor,
                     _sparse_contrib, gibbs_step)
 from .noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
@@ -82,6 +106,28 @@ from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
                      SpikeAndSlabPrior)
 
 FACTOR_AXES = ("pod", "data", "model")
+
+PIPELINES = ("eager", "ring")
+
+# below this shard count the ring loop is unrolled (tests pin one
+# collective-permute per hop on the HLO); above it a lax.scan keeps the
+# program size flat (production meshes: one while loop, trip S - 1,
+# which launch/hlo_cost.py multiplies back out)
+RING_UNROLL_MAX = 32
+
+
+def resolve_pipeline(pipeline: Optional[str] = None) -> str:
+    """Validate the exchange-pipeline knob, defaulting from the
+    ``REPRO_PIPELINE`` environment variable (CI runs a ring leg that
+    way), else ``"eager"``."""
+    if pipeline is None:
+        pipeline = os.environ.get("REPRO_PIPELINE", "eager")
+    if pipeline not in PIPELINES:
+        raise ValueError(
+            f"unknown pipeline {pipeline!r}; valid pipelines: "
+            f"{', '.join(PIPELINES)} (the REPRO_PIPELINE environment "
+            "variable sets the default)")
+    return pipeline
 
 
 def _axes_in(mesh: Mesh) -> Tuple[str, ...]:
@@ -212,6 +258,62 @@ def _shard_index(axes: Tuple[str, ...], sizes: Tuple[int, ...]):
     return idx
 
 
+def _ring_accumulate(axes: Tuple[str, ...], sizes: Tuple[int, ...],
+                     shard, f_shard, init, chunk_fn):
+    """Circulate this device's shard of a fixed factor around the ring.
+
+    Device ``s`` starts from its own shard and receives the remaining
+    ``S - 1`` chunks via ``lax.ppermute`` over the flattened mesh axes
+    (exactly ``S - 1`` hops; no all-gather anywhere).  The hop moving
+    chunk ``t + 1`` is issued BEFORE chunk ``t`` is consumed, so on
+    targets with async collectives the wire transfer overlaps
+    ``chunk_fn``'s compute — the double-buffered exchange of the
+    asynchronous-communication BMF (arXiv:1705.10633).
+
+    ``chunk_fn(acc, chunk, c0) -> acc`` must be pure; ``c0`` is the
+    global row index of the chunk's first row (traced — device ``s``
+    sees chunk ``(s + t) % S`` at step ``t``).  Unrolled below
+    ``RING_UNROLL_MAX`` shards, ``lax.scan``-rolled above it.
+    """
+    S = int(np.prod(sizes))
+    rows_per = f_shard.shape[0]
+    perm = [((j + 1) % S, j) for j in range(S)]
+
+    def c0_at(t):
+        return ((shard + t) % S) * rows_per
+
+    if S <= RING_UNROLL_MAX:
+        acc, chunk = init, f_shard
+        for t in range(S):
+            nxt = jax.lax.ppermute(chunk, axes, perm) if t < S - 1 \
+                else None
+            acc = chunk_fn(acc, chunk, c0_at(t))
+            chunk = nxt
+        return acc
+
+    def body(carry, t):
+        chunk, acc = carry
+        nxt = jax.lax.ppermute(chunk, axes, perm)
+        return (nxt, chunk_fn(acc, chunk, c0_at(t))), None
+
+    (chunk, acc), _ = jax.lax.scan(body, (f_shard, init),
+                                   jnp.arange(S - 1))
+    return chunk_fn(acc, chunk, c0_at(S - 1))
+
+
+def _streamable(model: ModelDef, bi: int, e: int) -> bool:
+    """True when block ``bi``'s contribution to entity ``e``'s update
+    can consume the ring exchange chunk-by-chunk, never materializing
+    the dense fixed view: dense payload, pred-free augmentation (non-
+    probit), and ``e`` is the EARLIER-updated side (the later side's
+    view is the one the end-of-sweep metrics reuse, so that half-sweep
+    reassembles it instead)."""
+    blk = model.blocks[bi]
+    return (not blk.sparse
+            and not isinstance(blk.noise, ProbitNoise)
+            and max(blk.row_entity, blk.col_entity) != e)
+
+
 def _psum_hyper(model: ModelDef, e: int, key, u, hyper, side, axes,
                 ftf=None):
     """Hyper-sample from psummed moments — replicated-identical output.
@@ -248,21 +350,24 @@ def _psum_hyper(model: ModelDef, e: int, key, u, hyper, side, axes,
 
 
 def _sharded_sweep(model: ModelDef, axes: Tuple[str, ...],
-                   sizes: Tuple[int, ...], ftf, data: MFData,
-                   state: MFState):
+                   sizes: Tuple[int, ...], pipeline: str, ftf,
+                   data: MFData, state: MFState):
     """One full Gibbs sweep, executed per-shard inside shard_map.
 
     Mirrors ``gibbs.gibbs_step`` exactly — same key-splitting sequence,
     same per-row draws (offset by the shard's global row origin), same
     per-block contributions (sparse padded-CSR or dense, Gaussian or
     probit-augmented) — with the three global couplings made explicit:
-    one fixed-factor all-gather per half-sweep, K/K^2 psums for the
+    one fixed-factor exchange per half-sweep (a blocking ``all_gather``
+    in the ``"eager"`` pipeline, ``S - 1`` double-buffered ``ppermute``
+    hops in ``"ring"`` — see the module docstring), K/K^2 psums for the
     hyper moments, scalar psums for residual SSE/nnz.  ``ftf`` holds
     the per-entity Macau side-Gramians, precomputed and replicated
     (None for non-Macau entities).
     """
     S = int(np.prod(sizes))
     shard = _shard_index(axes, sizes)
+    ring = pipeline == "ring"
     key, *ekeys = jax.random.split(state.key, len(model.entities) + 2)
     nkey = ekeys[-1]
     factors = list(state.factors)          # row shards (N_e / S, K)
@@ -271,14 +376,30 @@ def _sharded_sweep(model: ModelDef, axes: Tuple[str, ...],
 
     gathered = {}   # entity -> full exchange-view factor on this shard
 
+    def _wire_cast(f):
+        return f.astype(jnp.bfloat16) if model.bf16_gather else f
+
     def fixed_view(o: int):
-        """The dense fixed factor: ONE tiled all-gather, bf16 when the
-        model flags it (cast before the collective — half the bytes)."""
+        """The dense fixed factor of entity ``o`` on this shard.
+
+        Eager: ONE tiled all-gather, bf16 when the model flags it
+        (cast before the collective — half the bytes).  Ring: the same
+        bytes arrive as ``S - 1`` ppermute hops and are reassembled by
+        ``dynamic_update_slice`` — bitwise the all-gathered array (pure
+        data movement, no arithmetic), with zero all-gathers in the
+        program.
+        """
         if o not in gathered:
-            f = factors[o]
-            if model.bf16_gather:
-                f = f.astype(jnp.bfloat16)
-            ag = jax.lax.all_gather(f, axes, axis=0, tiled=True)
+            f = _wire_cast(factors[o])
+            if ring:
+                full0 = jnp.zeros((model.entities[o].n_rows, f.shape[1]),
+                                  f.dtype)
+                ag = _ring_accumulate(
+                    axes, sizes, shard, f, full0,
+                    lambda acc, chunk, c0:
+                        jax.lax.dynamic_update_slice(acc, chunk, (c0, 0)))
+            else:
+                ag = jax.lax.all_gather(f, axes, axis=0, tiled=True)
             if model.bf16_gather:
                 # Keep the gathered value bf16 in the optimized graph:
                 # without the barrier the algebraic simplifier may hoist
@@ -327,7 +448,77 @@ def _sharded_sweep(model: ModelDef, axes: Tuple[str, ...],
         rhs_acc = jnp.zeros((ent.n_rows // S, model.num_latent),
                             jnp.float32)
         bkeys = jax.random.split(k_blk, max(1, len(model.blocks)))
-        for bi, as_row in model.blocks_touching(e):
+        touching = model.blocks_touching(e)
+        streamed = set()
+        if ring:
+            # Chunk-accumulated circulations: group the touching blocks
+            # by their fixed entity; a group streams (per-chunk Gram/RHS
+            # folded into the ring, the dense fixed view NEVER
+            # materialized) when every consumer qualifies — see
+            # ``_streamable``.  Non-streamed groups fall through to the
+            # reassembled ``fixed_view`` below.
+            by_fixed = {}
+            for bi, as_row in touching:
+                by_fixed.setdefault(model.blocks[bi].other(e),
+                                    []).append((bi, as_row))
+            for o, group in by_fixed.items():
+                if o in gathered or not all(_streamable(model, bi, e)
+                                            for bi, _ in group):
+                    continue
+                streamed.update(bi for bi, _ in group)
+                # augment once per block up front (pred-free for the
+                # non-probit noises this path admits); one circulation
+                # then folds every block's moment contributions chunk
+                # by chunk, overlapping the next hop's wire transfer
+                prep = []
+                for bi, as_row in group:
+                    blk = model.blocks[bi]
+                    X, msk = data.blocks[bi].oriented(as_row)
+                    vals, alpha = blk.noise.augment(
+                        bkeys[bi], noises[bi], None, X, msk,
+                        row_offset=row_offset)
+                    prep.append((data.blocks[bi].fully, vals, msk, alpha))
+                K = model.num_latent
+                R = ent.n_rows // S
+                init = tuple(
+                    (jnp.zeros((K, K), jnp.float32) if fully else None,
+                     None if fully else jnp.zeros((R, K, K), jnp.float32),
+                     jnp.zeros((R, K), jnp.float32))
+                    for fully, _, _, _ in prep)
+
+                def chunk_fn(acc, chunk, c0, prep=prep):
+                    if model.bf16_gather:
+                        # same guard as fixed_view's reassembled view:
+                        # without the barrier the algebraic simplifier
+                        # may hoist the moment math's bf16->f32 upcast
+                        # through the ppermute chain and move f32 on
+                        # the wire
+                        chunk = jax.lax.optimization_barrier(chunk)
+                    out = []
+                    for (fully, vals, msk, _), (gs, gr, rh) in zip(prep,
+                                                                   acc):
+                        dgs, dgr, drh = _dense_chunk_contrib(
+                            vals, msk, fully, chunk, c0)
+                        out.append((
+                            None if gs is None else gs + dgs,
+                            None if gr is None else gr + dgr,
+                            rh + drh))
+                    return tuple(out)
+
+                accs = _ring_accumulate(axes, sizes, shard,
+                                        _wire_cast(factors[o]), init,
+                                        chunk_fn)
+                for (fully, _, _, alpha), (gs, gr, rh) in zip(prep, accs):
+                    if gs is not None:
+                        gram_shared = alpha * gs if gram_shared is None \
+                            else gram_shared + alpha * gs
+                    if gr is not None:
+                        gram_rows = alpha * gr if gram_rows is None \
+                            else gram_rows + alpha * gr
+                    rhs_acc = rhs_acc + alpha * rh
+        for bi, as_row in touching:
+            if bi in streamed:
+                continue
             blk = model.blocks[bi]
             fixed = fixed_view(blk.other(e))
             if blk.sparse:
@@ -417,7 +608,7 @@ def _macau_ftf(model: ModelDef, data: MFData):
 
 
 def make_distributed_step(model: ModelDef, mesh: Mesh, data: MFData,
-                          state: MFState):
+                          state: MFState, pipeline: Optional[str] = None):
     """The distributed sweep jitted on ``mesh``.
 
     Returns (step_fn, placed_data, placed_state) — on real hardware the
@@ -427,10 +618,19 @@ def make_distributed_step(model: ModelDef, mesh: Mesh, data: MFData,
     single-device ``gibbs_step`` with the same in/out shardings and
     lets the partitioner place the collectives.
 
+    ``pipeline`` selects the fixed-factor exchange: ``"eager"`` (one
+    blocking all-gather per half-sweep) or ``"ring"`` (``S - 1``
+    double-buffered ppermute hops overlapping the local solves); None
+    defers to the ``REPRO_PIPELINE`` environment variable (see
+    ``resolve_pipeline``).  The knob only changes HOW the exchange
+    travels — the sampled chain is pinned to the eager one by the
+    ring-vs-eager parity and golden-chain tests.
+
     ``step_fn(data, state)`` closes over the precomputed Macau
     side-Gramians (replicated) and exposes ``.lower(data, state)``
     exactly like a bare ``jax.jit`` result.
     """
+    pipeline = resolve_pipeline(pipeline)
     ss = state_shardings(model, mesh, state)
     ds = data_shardings(model, mesh, data)
     if distributed_supported(model, mesh, data):
@@ -439,7 +639,8 @@ def make_distributed_step(model: ModelDef, mesh: Mesh, data: MFData,
         ftf = _macau_ftf(model, data)
         ftf_specs = jax.tree.map(lambda x: P(), ftf)
         body = compat.shard_map(
-            partial(_sharded_sweep, model, axes, sizes), mesh=mesh,
+            partial(_sharded_sweep, model, axes, sizes, pipeline),
+            mesh=mesh,
             in_specs=(ftf_specs,
                       data_specs(model, mesh, data),
                       state_specs(model, mesh, state)),

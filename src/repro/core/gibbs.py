@@ -119,6 +119,31 @@ def _dense_contrib(payload: DenseBlock, as_row: bool, fixed: jnp.ndarray,
     return None, gram_rows, rhs
 
 
+def _dense_chunk_contrib(vals: jnp.ndarray, m: jnp.ndarray, fully: bool,
+                         chunk: jnp.ndarray, c0):
+    """Chunk-accumulating form of ``_dense_contrib``'s moment math.
+
+    ``chunk`` holds rows ``[c0, c0 + Cc)`` of the fixed factor (one
+    ring-exchange hop's worth); ``vals``/``m`` are the full oriented
+    (R, C) payload, already noise-augmented.  Returns this chunk's
+    additive contribution ``(gram_shared | None, gram_rows | None,
+    rhs)``.  Summed over any partition of ``[0, C)`` the contributions
+    equal the monolithic moments up to f32 summation order — the
+    per-chunk compute the ring pipeline overlaps with the next hop's
+    ``ppermute`` (property-tested against the monolithic forms in
+    ``tests/test_properties.py``, including the ``fully=True`` shared-
+    Gram fast path and uneven chunk widths).  The alpha weight is
+    applied by the caller AFTER accumulation, not per chunk.
+    """
+    Cc = chunk.shape[0]
+    vs = jax.lax.dynamic_slice_in_dim(vals, c0, Cc, axis=1)
+    if fully:
+        return chunk.T @ chunk, None, vs @ chunk
+    ms = jax.lax.dynamic_slice_in_dim(m, c0, Cc, axis=1)
+    gram_rows = jnp.einsum("rc,ck,cl->rkl", ms, chunk, chunk)
+    return None, gram_rows, (vs * ms) @ chunk
+
+
 # ---------------------------------------------------------------------------
 # factor conditionals
 # ---------------------------------------------------------------------------

@@ -61,14 +61,63 @@ def _prior_by_name(name: str, num_latent: int):
     return _PRIORS[name](num_latent)
 
 
+def _place_step(model: ModelDef, data: MFData, state: MFState,
+                mesh: Any, pipeline: Optional[str]):
+    """(data, state, step) — distributed through ``mesh`` when given.
+
+    Shared by ``TrainSession`` and ``GFASession``: builds the explicit
+    shard_map sweep with the requested exchange ``pipeline``
+    ("eager"/"ring"/None-for-REPRO_PIPELINE) and places data/state on
+    the mesh; without a mesh the single-device ``gibbs_step`` runs.
+    Warns when the model falls outside the sharded subset (entity dims
+    must divide the shard count) — the pjit fallback still samples the
+    same chain, just with partitioner-placed collectives.  The
+    ``pipeline`` knob is validated even without a mesh (a typo must
+    raise, not silently run the single-device sweep), and asking for a
+    pipeline WITH no mesh to run it on warns — there is no exchange to
+    pipeline.
+    """
+    from .distributed import (distributed_supported,
+                              make_distributed_step, resolve_pipeline)
+    resolve_pipeline(pipeline)
+    if mesh is None:
+        if pipeline is not None:
+            import warnings
+            warnings.warn(
+                f"pipeline={pipeline!r} has no effect without mesh=: "
+                "the session runs the single-device sweep",
+                stacklevel=3)
+        return data, state, (lambda d, s: gibbs_step(model, d, s))
+    if not distributed_supported(model, mesh, data):
+        import warnings
+        warnings.warn(
+            "model is outside the sharded subset on this mesh (entity "
+            "dims must divide the shard count); falling back to "
+            "auto-partitioned pjit", stacklevel=3)
+    step, ds, ss = make_distributed_step(model, mesh, data, state,
+                                         pipeline=pipeline)
+    return jax.device_put(data, ds), jax.device_put(state, ss), step
+
+
 class TrainSession:
-    """Single-R-matrix session (BMF / Macau / probit variants)."""
+    """Single-R-matrix session (BMF / Macau / probit variants).
+
+    Pass ``mesh`` to run the chain through the explicit distributed
+    sweep (``make_distributed_step``); ``pipeline`` then selects the
+    fixed-factor exchange — ``"eager"`` (one all-gather per half-sweep)
+    or ``"ring"`` (``n_shards - 1`` double-buffered ppermute hops
+    overlapping the local solves).  ``None`` defers to the
+    ``REPRO_PIPELINE`` environment variable; either way the sampled
+    chain matches the single-device one at reduction-order tolerance
+    (counter-based per-row RNG — see ``core/distributed.py``).
+    """
 
     def __init__(self, num_latent: int = 16, burnin: int = 100,
                  nsamples: int = 100, seed: int = 0,
                  priors: Sequence[str] = ("normal", "normal"),
                  use_pallas: bool = False, verbose: int = 0,
-                 save_freq: int = 0):
+                 save_freq: int = 0, mesh: Any = None,
+                 pipeline: Optional[str] = None):
         self.num_latent = num_latent
         self.burnin = burnin
         self.nsamples = nsamples
@@ -78,6 +127,8 @@ class TrainSession:
         self.use_pallas = use_pallas
         self.verbose = verbose
         self.save_freq = save_freq
+        self.mesh = mesh
+        self.pipeline = pipeline
         self._train: Optional[Any] = None
         self._test: Optional[TestSet] = None
         self._noise: Any = FixedGaussian(5.0)
@@ -139,6 +190,8 @@ class TrainSession:
     def run(self, keep_samples: bool = False) -> SessionResult:
         model, data = self._build()
         state = init_state(model, data, self.seed)
+        data, state, step = _place_step(model, data, state, self.mesh,
+                                        self.pipeline)
         acc = PredictAccumulator(self._test) if self._test else None
         t0 = time.perf_counter()
         train_trace, test_trace = [], []
@@ -146,7 +199,7 @@ class TrainSession:
 
         total = self.burnin + self.nsamples
         for sweep in range(total):
-            state, metrics = gibbs_step(model, data, state)
+            state, metrics = step(data, state)
             train_trace.append(float(metrics["rmse_train_0"]))
             if sweep >= self.burnin:
                 if acc is not None:
@@ -189,13 +242,16 @@ class GFASession:
     sweep (``make_distributed_step``): the spike-and-slab coordinate
     updates are counter-based per global row, so the sharded chain
     matches this single-device one at reduction-order tolerance — GFA
-    is in the sharded subset, not on a pjit fallback.
+    is in the sharded subset, not on a pjit fallback.  ``pipeline``
+    selects the fixed-factor exchange ("eager" all-gather vs "ring"
+    ppermute hops; None defers to ``REPRO_PIPELINE``).
     """
 
     def __init__(self, views: Sequence[np.ndarray], num_latent: int = 8,
                  burnin: int = 200, nsamples: int = 200, seed: int = 0,
                  noise: Any = None, use_pallas: bool = False,
-                 zero_init_loadings: bool = True, mesh: Any = None):
+                 zero_init_loadings: bool = True, mesh: Any = None,
+                 pipeline: Optional[str] = None):
         self.views = [np.asarray(v, np.float32) for v in views]
         self.num_latent = num_latent
         self.burnin = burnin
@@ -210,6 +266,7 @@ class GFASession:
         # explicit rotation-optimization step for the same reason).
         self.zero_init_loadings = zero_init_loadings
         self.mesh = mesh
+        self.pipeline = pipeline
 
     def _build(self) -> Tuple[ModelDef, MFData]:
         N = self.views[0].shape[0]
@@ -237,27 +294,8 @@ class GFASession:
             for e in range(1, len(fs)):
                 fs[e] = jnp.zeros_like(fs[e])
             state = state._replace(factors=tuple(fs))
-        if self.mesh is not None:
-            from .distributed import (distributed_supported,
-                                      make_distributed_step)
-            if not distributed_supported(model, self.mesh, data):
-                # every view dim (and N) must divide the shard count —
-                # otherwise make_distributed_step would silently hand
-                # back the pjit fallback this session layer promises
-                # to avoid
-                import warnings
-                warnings.warn(
-                    "GFA model is outside the sharded subset on this "
-                    "mesh (entity dims must divide the shard count); "
-                    "falling back to auto-partitioned pjit",
-                    stacklevel=2)
-            step, ds, ss = make_distributed_step(model, self.mesh,
-                                                 data, state)
-            data = jax.device_put(data, ds)
-            state = jax.device_put(state, ss)
-        else:
-            def step(d, s):
-                return gibbs_step(model, d, s)
+        data, state, step = _place_step(model, data, state, self.mesh,
+                                        self.pipeline)
         t0 = time.perf_counter()
         train_traces: List[List[float]] = [[] for _ in self.views]
         # posterior means of Z and the W_m

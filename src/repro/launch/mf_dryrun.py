@@ -44,10 +44,31 @@ Variants:
                   collective_bytes do NOT drop here.  The bf16
                   exchange is pinned on the lowered StableHLO in
                   tests/test_distributed.py instead.)
+    ring          the fixed-factor exchange travels as n_shards - 1
+                  double-buffered ``ppermute`` hops instead of one
+                  blocking all-gather (``pipeline="ring"`` on
+                  ``make_distributed_step``) — same wire bytes, zero
+                  all-gathers, and each hop is issued before the
+                  previous chunk is consumed so the exchange hides
+                  behind local work.
+
+Exchange model (per-sweep per-device seconds, in every record):
+    exchange_s_serial   collective_bytes / ICI_BW — the wire time,
+                        which the eager pipeline fully EXPOSES (the
+                        blocking all-gather precedes every row solve
+                        of its half-sweep)
+    exchange_s_modeled  the exposed exchange time after overlap:
+                        equal to exchange_s_serial for eager;
+                        max(serial - max(compute_s, memory_s), 0) for
+                        ring, whose hops overlap the chunk-accumulated
+                        Gram/RHS math and local solves.  Eager stays
+                        the session default until this term wins on
+                        the deploy target.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.mf_dryrun [--cell bmf_chembl]
-        [--mesh single|multi|both] [--variant baseline|bf16gather]
+        [--mesh single|multi|both]
+        [--variant baseline|bf16gather|ring]
 """
 import argparse
 import dataclasses
@@ -219,14 +240,16 @@ def lower_cell(cell: MFCell, mesh, variant: str):
     model = build_model(cell, variant)
     data = abstract_data(cell)
     state = jax.eval_shape(lambda: init_state(model, data, 0))
+    pipeline = "ring" if "ring" in variant else "eager"
 
     t0 = time.perf_counter()
-    # explicit shard_map sweep (one fixed-factor all-gather per
+    # explicit shard_map sweep (one fixed-factor exchange per
     # half-sweep + K/K^2 moment psums); production cells are always in
     # the sharded subset — assert rather than silently fall back to the
     # auto-partitioned path whose collectives we are here to measure.
     assert distributed_supported(model, mesh, data), cell.name
-    step, ds, ss = make_distributed_step(model, mesh, data, state)
+    step, ds, ss = make_distributed_step(model, mesh, data, state,
+                                         pipeline=pipeline)
     lowered = step.lower(data, state)
     t_lower = time.perf_counter() - t0
     compiled = lowered.compile()
@@ -241,12 +264,20 @@ def lower_cell(cell: MFCell, mesh, variant: str):
     comp = hc["flops"] / PEAK_FLOPS
     memt = bytes_hbm / HBM_BW
     coll = hc["collective_bytes"]["total"] / ICI_BW
+    # overlap-aware exchange term: the eager all-gather blocks the
+    # half-sweep it feeds (fully exposed wire time); the ring's
+    # ppermute hops are double-buffered against the chunk-accumulated
+    # moment math and local solves, exposing only what the local work
+    # cannot cover (see module docstring)
+    exchange = coll if pipeline == "eager" \
+        else max(coll - max(comp, memt), 0.0)
     mf = mf_model_flops(cell, n_chips)
     bound = max(comp, memt, coll)
     rec = {
         "arch": f"mf_{cell.name}", "shape": "gibbs_sweep",
         "mesh": "x".join(str(s) for s in mesh.devices.shape),
-        "kind": "mf", "variant": variant, "n_chips": int(n_chips),
+        "kind": "mf", "variant": variant, "pipeline": pipeline,
+        "n_chips": int(n_chips),
         "flops": hc["flops"],
         "bytes_accessed": hc["bytes_accessed"],
         "bytes_hbm": bytes_hbm,
@@ -260,6 +291,7 @@ def lower_cell(cell: MFCell, mesh, variant: str):
         "lower_s": round(t_lower, 1),
         "compile_s": round(t_compile, 1),
         "compute_s": comp, "memory_s": memt, "collective_s": coll,
+        "exchange_s_serial": coll, "exchange_s_modeled": exchange,
         "dominant": max(("compute", comp), ("memory", memt),
                         ("collective", coll), key=lambda kv: kv[1])[0],
         "model_flops": mf,
@@ -294,7 +326,12 @@ def main() -> None:
     ap.add_argument("--cell", choices=list(CELLS) + ["all"], default="all")
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
-    ap.add_argument("--variant", default="baseline")
+    # composable tags: build_model keys on the "bf16gather" substring,
+    # lower_cell on "ring" — fail fast on anything else (a typo must
+    # not lower 256 chips and write a baseline JSON under a bogus tag)
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "bf16gather", "ring",
+                             "bf16gather_ring"])
     args = ap.parse_args()
     cells = list(CELLS) if args.cell == "all" else [args.cell]
     meshes = {"single": ["single"], "multi": ["multi"],
@@ -310,6 +347,7 @@ def main() -> None:
                 print(f"{c:16s} {mk:6s} ok comp {rec['compute_s']:.2e} "
                       f"mem {rec['memory_s']:.2e} "
                       f"coll {rec['collective_s']:.2e} "
+                      f"xchg {rec['exchange_s_modeled']:.2e} "
                       f"dom={rec['dominant']} rf={rec['roofline_fraction']:.4f}")
     if fail:
         raise SystemExit(1)

@@ -47,6 +47,16 @@ class _Strategies:
                          .get(mode, bool(rng.integers(0, 2))))
 
     @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        def draw(rng, mode):
+            if mode == "min":
+                return float(min_value)
+            if mode == "max":
+                return float(max_value)
+            return float(rng.uniform(min_value, max_value))
+        return _Strategy(draw)
+
+    @staticmethod
     def composite(fn):
         """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy
         factory, with ``draw`` resolving sub-strategies in sequence."""

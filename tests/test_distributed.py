@@ -1,6 +1,19 @@
 """Distributed MF: the explicit shard_map Gibbs sweep on an 8-device
 host mesh matches the single-device chain, and its compiled program
-moves exactly one fixed-factor all-gather per half-sweep.
+moves exactly one fixed-factor all-gather per half-sweep (eager
+pipeline) or exactly ``n_shards - 1`` collective-permutes and ZERO
+all-gathers per half-sweep (ring pipeline).
+
+Ring contract (see core/distributed.py): the ring reassembles or
+chunk-consumes the same bytes the all-gather moves, through pure data
+movement (where/`dynamic_update_slice`) for every gather-indexed
+consumer — so on sparse paths (gaussian, probit, macau, sparse-SnS)
+the ring chain is BITWISE the eager chain, metrics included, asserted
+below.  Dense blocks chunk-accumulate their Gram/RHS moments into the
+circulating hops (the overlap that motivates the ring), which
+reorders f32 summation: those chains are asserted at the same 2e-4 /
+reduction-order tolerance as the distributed-vs-single-device
+contract.
 
 Agreement contract (see core/distributed.py): every per-row normal
 draw is bit-identical to the single-device sweep (counter-based
@@ -311,7 +324,10 @@ _HLO_SNS_SCRIPT = textwrap.dedent("""
     data = MFData(tuple(payloads), tuple([None] * len(ents)))
     assert distributed_supported(model, mesh, data)
     state = init_state(model, data, seed=0)
-    step, ds, ss = make_distributed_step(model, mesh, data, state)
+    # the EAGER exchange contract is pinned explicitly (the ring
+    # pipeline has its own HLO script and the env default may be ring)
+    step, ds, ss = make_distributed_step(model, mesh, data, state,
+                                         pipeline="eager")
     lowered = step.lower(data, state)
     txt = lowered.as_text()
 
@@ -343,6 +359,246 @@ _HLO_SNS_SCRIPT = textwrap.dedent("""
     print("OK")
 """)
 
+_RING_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (AdaptiveGaussian, FixedGaussian, MFData,
+                            ProbitNoise, dense_block, init_state,
+                            gibbs_step)
+    from repro.core.blocks import BlockDef, EntityDef, ModelDef
+    from repro.core import distributed as D
+    from repro.core.priors import (FixedNormalPrior, MacauPrior,
+                                   NormalPrior, SpikeAndSlabPrior)
+    from repro.core.sparse import random_sparse
+    from repro.launch.mesh import make_mesh
+
+    K = 8
+    n_rows, n_cols = 96, 48
+    # the flattened two-axis mesh: the ring permutes over ("data",
+    # "model") jointly, the hardest routing case
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+
+    def run(model, data, pipeline, sweeps=3):
+        state = init_state(model, data, seed=0)
+        assert D.distributed_supported(model, mesh, data)
+        step, ds, ss = D.make_distributed_step(model, mesh, data, state,
+                                               pipeline=pipeline)
+        st = jax.device_put(state, ss)
+        pdata = jax.device_put(data, ds)
+        for _ in range(sweeps):
+            st, m = step(pdata, st)
+        return st, m
+
+    def parity(name, model, data, bitwise):
+        st1 = init_state(model, data, seed=0)
+        for _ in range(3):
+            st1, m1 = gibbs_step(model, data, st1)
+        ste, me = run(model, data, "eager")
+        str_, mr = run(model, data, "ring")
+        # ring matches the single-device chain at the distributed
+        # contract tolerance for every family...
+        for a, b in zip(st1.factors, str_.factors):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4, err_msg=name)
+        # ...and matches the eager sharded chain BITWISE on sparse
+        # paths (the ring reassembles the exact gather operands:
+        # data movement only, no re-summation), metrics included
+        for a, b in zip(ste.factors, str_.factors):
+            if bitwise:
+                assert np.array_equal(np.asarray(a), np.asarray(b)), name
+            else:
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=2e-4, atol=2e-4,
+                                           err_msg=name)
+        for k in me:
+            if bitwise:
+                assert float(me[k]) == float(mr[k]), (name, k)
+            else:
+                np.testing.assert_allclose(float(me[k]), float(mr[k]),
+                                           rtol=1e-4, err_msg=(name, k))
+        print(name, "ring parity ok", "bitwise" if bitwise else "2e-4",
+              float(mr["rmse_train_0"]))
+
+    def two_entity(noise, sparse, row_prior=None):
+        return ModelDef(
+            (EntityDef("r", n_rows, row_prior or NormalPrior(K)),
+             EntityDef("c", n_cols, NormalPrior(K))),
+            (BlockDef(0, 1, noise, sparse=sparse),), K, False)
+
+    mat, _, _ = random_sparse(0, (n_rows, n_cols), 0.2, rank=4)
+    parity("gaussian", two_entity(FixedGaussian(5.0), True),
+           MFData((mat,), (None, None)), bitwise=True)
+
+    bmat, _, _ = random_sparse(0, (n_rows, n_cols), 0.2, rank=4,
+                               binary=True)
+    parity("probit", two_entity(ProbitNoise(), True),
+           MFData((bmat,), (None, None)), bitwise=True)
+
+    Dside = 12
+    side = jnp.asarray(rng.normal(size=(n_rows, Dside)), jnp.float32)
+    parity("macau",
+           two_entity(FixedGaussian(5.0), True,
+                      row_prior=MacauPrior(K, Dside)),
+           MFData((mat,), (side, None)), bitwise=True)
+
+    # dense blocks chunk-accumulate their moments into the ring hops
+    # (the overlap), which reorders the f32 sums -> 2e-4, not bitwise
+    R = rng.normal(size=(n_rows, n_cols)).astype(np.float32)
+    parity("dense_full", two_entity(FixedGaussian(5.0), False),
+           MFData((dense_block(R),), (None, None)), bitwise=False)
+
+    # the GFA composition: FixedNormal Z + SnS loadings on 3 views
+    N, dims = 96, (72, 48, 24)
+    Z = rng.normal(size=(N, K)).astype(np.float32)
+    ents = [EntityDef("samples", N, FixedNormalPrior(K))]
+    blocks, payloads = [], []
+    for m, Dm in enumerate(dims):
+        W = rng.normal(size=(Dm, K)).astype(np.float32)
+        X = (Z @ W.T + 0.1 * rng.normal(size=(N, Dm))).astype(np.float32)
+        ents.append(EntityDef(f"view{m}", Dm, SpikeAndSlabPrior(K)))
+        blocks.append(BlockDef(0, m + 1, AdaptiveGaussian(),
+                               sparse=False))
+        payloads.append(dense_block(X))
+    parity("gfa", ModelDef(tuple(ents), tuple(blocks), K, False),
+           MFData(tuple(payloads), tuple([None] * len(ents))),
+           bitwise=False)
+
+    # SnS on the sparse block's column axis (BMF + SnS): the SnS
+    # coordinate loop reads the ring-reassembled view -> bitwise
+    parity("sparse_sns",
+           ModelDef((EntityDef("r", n_rows, NormalPrior(K)),
+                     EntityDef("c", n_cols, SpikeAndSlabPrior(K))),
+                    (BlockDef(0, 1, FixedGaussian(5.0), sparse=True),),
+                    K, False),
+           MFData((mat,), (None, None)), bitwise=True)
+
+    # the scan-rolled ring (production shard counts): force the rolled
+    # form on this 8-device mesh and pin it to the same bitwise chain
+    D.RING_UNROLL_MAX = 4
+    ste, me = run(two_entity(FixedGaussian(5.0), True),
+                  MFData((mat,), (None, None)), "eager")
+    str_, mr = run(two_entity(FixedGaussian(5.0), True),
+                   MFData((mat,), (None, None)), "ring")
+    for a, b in zip(ste.factors, str_.factors):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), "scan ring"
+    print("scan-rolled ring bitwise ok")
+    print("OK")
+""")
+
+_RING_HLO_SCRIPT = textwrap.dedent("""
+    import os, re
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (AdaptiveGaussian, FixedGaussian, MFData,
+                            ProbitNoise, dense_block, init_state)
+    from repro.core.blocks import BlockDef, EntityDef, ModelDef
+    from repro.core.distributed import (distributed_supported,
+                                        make_distributed_step)
+    from repro.core.priors import (FixedNormalPrior, MacauPrior,
+                                   NormalPrior, SpikeAndSlabPrior)
+    from repro.core.sparse import random_sparse
+    from repro.launch.mesh import make_mesh
+
+    K, Dside = 8, 12
+    n_rows, n_cols = 96, 48
+    S = 8
+    rng = np.random.default_rng(0)
+    mat, _, _ = random_sparse(0, (n_rows, n_cols), 0.2, rank=4)
+    bmat, _, _ = random_sparse(0, (n_rows, n_cols), 0.2, rank=4,
+                               binary=True)
+    R = rng.normal(size=(n_rows, n_cols)).astype(np.float32)
+    side = jnp.asarray(rng.normal(size=(n_rows, Dside)), jnp.float32)
+
+    def ents(row_prior):
+        return (EntityDef("r", n_rows, row_prior),
+                EntityDef("c", n_cols, NormalPrior(K)))
+
+    gfa_ents = [EntityDef("samples", 96, FixedNormalPrior(K)),
+                EntityDef("view0", 48, SpikeAndSlabPrior(K)),
+                EntityDef("view1", 24, SpikeAndSlabPrior(K))]
+    gfa_blocks = [BlockDef(0, 1, AdaptiveGaussian(), sparse=False),
+                  BlockDef(0, 2, AdaptiveGaussian(), sparse=False)]
+    gfa_payloads = tuple(
+        dense_block(rng.normal(size=(96, Dm)).astype(np.float32))
+        for Dm in (48, 24))
+
+    cases = {
+        "gaussian": (
+            ModelDef(ents(NormalPrior(K)),
+                     (BlockDef(0, 1, FixedGaussian(5.0), sparse=True),),
+                     K),
+            MFData((mat,), (None, None))),
+        "gaussian_bf16": (
+            ModelDef(ents(NormalPrior(K)),
+                     (BlockDef(0, 1, FixedGaussian(5.0), sparse=True),),
+                     K, use_pallas=False, bf16_gather=True),
+            MFData((mat,), (None, None))),
+        "probit": (
+            ModelDef(ents(NormalPrior(K)),
+                     (BlockDef(0, 1, ProbitNoise(), sparse=True),), K),
+            MFData((bmat,), (None, None))),
+        "macau": (
+            ModelDef(ents(MacauPrior(K, Dside)),
+                     (BlockDef(0, 1, FixedGaussian(5.0), sparse=True),),
+                     K),
+            MFData((mat,), (side, None))),
+        "dense_full": (
+            ModelDef(ents(NormalPrior(K)),
+                     (BlockDef(0, 1, FixedGaussian(5.0), sparse=False),),
+                     K),
+            MFData((dense_block(R),), (None, None))),
+        "gfa": (
+            ModelDef(tuple(gfa_ents), tuple(gfa_blocks), K, False),
+            MFData(gfa_payloads, (None, None, None))),
+    }
+
+    # both mesh layouts: single axis and the flattened two-axis ring
+    for mesh_shape, mesh_axes in (((8,), ("data",)),
+                                  ((4, 2), ("data", "model"))):
+        mesh = make_mesh(mesh_shape, mesh_axes)
+        for name, (model, data) in cases.items():
+            assert distributed_supported(model, mesh, data), name
+            state = init_state(model, data, seed=0)
+            step, ds, ss = make_distributed_step(model, mesh, data,
+                                                 state, pipeline="ring")
+            lowered = step.lower(data, state)
+            txt = lowered.as_text()
+            E = len(model.entities)
+
+            # the ring communication contract, pre-backend: ZERO
+            # full-factor all-gathers anywhere in the program, and
+            # exactly n_shards - 1 collective-permutes per half-sweep
+            # (one circulation per entity per sweep — the metrics
+            # reuse the final half-sweep's reassembled view, exactly
+            # like eager reuses its gather)
+            assert "stablehlo.all_gather" not in txt, (name, mesh_shape)
+            cps = [l for l in txt.splitlines()
+                   if "stablehlo.collective_permute" in l]
+            assert len(cps) == E * (S - 1), (name, mesh_shape, len(cps))
+            if model.bf16_gather:
+                for line in cps:
+                    assert "bf16" in line, (name, line)
+
+            # and the backend keeps the count: n_shards - 1 permutes
+            # per half-sweep, zero all-gathers
+            ctxt = lowered.compile().as_text()
+            ags = re.findall(r"all-gather(?:-start)?\\(", ctxt)
+            assert not ags, (name, mesh_shape, len(ags))
+            cps = re.findall(r"collective-permute(?:-start)?\\(", ctxt)
+            assert len(cps) == E * (S - 1), (name, mesh_shape, len(cps))
+            print(name, "x".join(map(str, mesh_shape)),
+                  "collective-permutes", len(cps), "all-gathers 0")
+    print("OK")
+""")
+
 _HLO_SCRIPT = textwrap.dedent("""
     import os, re
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -366,7 +622,8 @@ _HLO_SCRIPT = textwrap.dedent("""
             (BlockDef(0, 1, FixedGaussian(5.0), sparse=True),), 8,
             use_pallas=False, bf16_gather=bf16)
         state = init_state(model, data, seed=0)
-        step, ds, ss = make_distributed_step(model, mesh, data, state)
+        step, ds, ss = make_distributed_step(model, mesh, data, state,
+                                             pipeline="eager")
         lowered = step.lower(data, state)
 
         # the communication contract, pre-backend: one all-gather of the
@@ -446,7 +703,8 @@ _HLO_WIDENED_SCRIPT = textwrap.dedent("""
     for name, (model, data) in cases.items():
         assert distributed_supported(model, mesh, data), name
         state = init_state(model, data, seed=0)
-        step, ds, ss = make_distributed_step(model, mesh, data, state)
+        step, ds, ss = make_distributed_step(model, mesh, data, state,
+                                             pipeline="eager")
         lowered = step.lower(data, state)
 
         # communication contract, pre-backend: ONE all-gather of the
@@ -480,6 +738,25 @@ def _run(script):
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "OK" in out.stdout
+
+
+def test_resolve_pipeline_validates_choices(monkeypatch):
+    """The pipeline knob fails fast with the valid choices (the
+    ``_PRIORS`` ValueError contract) and defers to REPRO_PIPELINE —
+    the env hook the CI ring leg rides — only when unset."""
+    from repro.core.distributed import resolve_pipeline
+
+    monkeypatch.delenv("REPRO_PIPELINE", raising=False)
+    assert resolve_pipeline() == "eager"
+    assert resolve_pipeline("ring") == "ring"
+    monkeypatch.setenv("REPRO_PIPELINE", "ring")
+    assert resolve_pipeline() == "ring"
+    assert resolve_pipeline("eager") == "eager"   # explicit wins
+    with pytest.raises(ValueError, match="valid pipelines.*eager.*ring"):
+        resolve_pipeline("warp")
+    monkeypatch.setenv("REPRO_PIPELINE", "warp")
+    with pytest.raises(ValueError, match="REPRO_PIPELINE"):
+        resolve_pipeline()
 
 
 @pytest.mark.slow
@@ -520,3 +797,24 @@ def test_distributed_hlo_sns_collective_contract():
     two K-sized hyper psums per SnS view plus the scalar noise psums,
     and ZERO per-component collectives."""
     _run(_HLO_SNS_SCRIPT)
+
+
+@pytest.mark.slow
+def test_distributed_ring_matches_eager():
+    """The ring-pipelined sweep (S-1 double-buffered ppermute hops per
+    half-sweep) matches the eager all-gather sweep: bitwise — metrics
+    included — on every sparse path (gaussian, probit, macau,
+    sparse-SnS), at the 2e-4 reduction-order tolerance on the
+    chunk-accumulated dense/GFA paths, and within 2e-4 of the
+    single-device chain for all of them.  Also pins the scan-rolled
+    ring (production shard counts) to the same bitwise chain."""
+    _run(_RING_PARITY_SCRIPT)
+
+
+@pytest.mark.slow
+def test_distributed_ring_hlo_collective_contract():
+    """Ring HLO across the model zoo on both mesh layouts: exactly
+    n_shards - 1 collective-permutes per half-sweep (one circulation
+    per entity per sweep, bf16 on the wire when flagged) and ZERO
+    full-factor all-gathers anywhere in the program."""
+    _run(_RING_HLO_SCRIPT)

@@ -204,11 +204,15 @@ _ELASTIC_SNS_SCRIPT = textwrap.dedent("""
 """)
 
 
-def _run(script):
+def _run(script, pipeline=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
                                      "src")
     env.pop("XLA_FLAGS", None)
+    if pipeline is not None:
+        # the scripts build their steps through make_distributed_step's
+        # env default, so the same harness runs both exchange pipelines
+        env["REPRO_PIPELINE"] = pipeline
     out = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stdout + out.stderr
@@ -226,3 +230,13 @@ def test_elastic_sns_hyper_state_roundtrip():
     to disk, re-meshes 8 -> 6, restores, and rejoins the single-device
     chain at the same 2e-4 tolerance."""
     _run(_ELASTIC_SNS_SCRIPT)
+
+
+@pytest.mark.slow
+def test_elastic_remesh_roundtrip_ring_pipeline():
+    """The 8 -> 6 re-mesh round-trip (disk checkpoint, device loss,
+    survivor rebuild) holds under the ring exchange too: the ring is
+    pure data-movement re-plumbing of the fixed-factor exchange, so
+    neither the npz round-trip nor the survivor count nor the exchange
+    pipeline perturbs the counter-based chain."""
+    _run(_ELASTIC_SCRIPT, pipeline="ring")

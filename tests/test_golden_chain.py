@@ -11,6 +11,12 @@ chain pins the counter-based SnS draw order (``row_bernoulli`` +
 per-component-folded ``row_normals``) that the distributed sweep's
 shard slices are defined against.
 
+``test_golden_chain_ring_pipeline_no_fork`` additionally replays the
+same three models through the RING-pipelined distributed sweep
+(``pipeline="ring"``) and asserts the trajectories land on the SAME
+fixture — the ring exchange must not fork the golden chains, so the
+fixture never needs a ring-mode regeneration.
+
 Tolerance: 1e-3 relative.  XLA reduction-order drift across versions
 measures ~1e-6..1e-5 on these trajectories; a changed draw sequence
 moves them by ~1e-1.  Regenerate INTENTIONALLY after an acknowledged
@@ -20,8 +26,11 @@ chain-breaking change:
 """
 import json
 import os
+import subprocess
+import sys
 
 import numpy as np
+import pytest
 
 from repro.core import (AdaptiveGaussian, BlockDef, EntityDef,
                         FixedNormalPrior, MFData, ModelDef, NormalPrior,
@@ -100,6 +109,102 @@ def test_golden_chain_trajectories():
                 err_msg=f"{name}.{key} drifted — if the chain change "
                         "is intentional, regen the fixture (see module "
                         "docstring)")
+
+
+_RING_GOLDEN_SCRIPT = r"""
+import json, os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+
+from repro.core import (AdaptiveGaussian, BlockDef, EntityDef,
+                        FixedNormalPrior, MFData, ModelDef, NormalPrior,
+                        ProbitNoise, SpikeAndSlabPrior, dense_block,
+                        init_state)
+from repro.core.distributed import (distributed_supported,
+                                    make_distributed_step)
+from repro.core.sparse import random_sparse
+from repro.launch.mesh import make_mesh
+
+FIXTURE = os.environ["GOLDEN_FIXTURE"]
+SWEEPS, SEED, K = 3, 11, 4
+
+with open(FIXTURE) as f:
+    golden = json.load(f)["chains"]
+assert json.load(open(FIXTURE))["seed"] == SEED
+
+
+def ring_chain(model, data, n_dev):
+    # the GFA golden dims (16, 12) divide 4 shards, not 8 — the mesh
+    # is part of the harness, the chain must not depend on it
+    mesh = make_mesh((n_dev,), ("data",))
+    assert distributed_supported(model, mesh, data)
+    state = init_state(model, data, seed=SEED)
+    step, ds, ss = make_distributed_step(model, mesh, data, state,
+                                         pipeline="ring")
+    st = jax.device_put(state, ss)
+    pdata = jax.device_put(data, ds)
+    rmse, alpha = [], []
+    for _ in range(SWEEPS):
+        st, metrics = step(pdata, st)
+        rmse.append(float(metrics["rmse_train_0"]))
+        alpha.append(float(metrics["alpha_0"]))
+    return {"rmse_train": rmse, "alpha": alpha}
+
+
+chains = {}
+n_rows, n_cols = 48, 32
+for name in ("gaussian", "probit"):
+    binary = name == "probit"
+    mat, _, _ = random_sparse(SEED, (n_rows, n_cols), 0.3, rank=3,
+                              binary=binary)
+    noise = ProbitNoise() if binary else AdaptiveGaussian()
+    model = ModelDef((EntityDef("r", n_rows, NormalPrior(K)),
+                      EntityDef("c", n_cols, NormalPrior(K))),
+                     (BlockDef(0, 1, noise, sparse=True),), K, False)
+    chains[name] = ring_chain(model, MFData((mat,), (None, None)), 8)
+
+rng = np.random.default_rng(SEED)
+N, dims = 48, (16, 12)
+Z = rng.normal(size=(N, K)).astype(np.float32)
+ents = [EntityDef("samples", N, FixedNormalPrior(K))]
+blocks, payloads = [], []
+for m, D in enumerate(dims):
+    W = rng.normal(size=(D, K)).astype(np.float32)
+    X = (Z @ W.T + 0.1 * rng.normal(size=(N, D))).astype(np.float32)
+    ents.append(EntityDef(f"view{m}", D, SpikeAndSlabPrior(K)))
+    blocks.append(BlockDef(0, m + 1, AdaptiveGaussian(), sparse=False))
+    payloads.append(dense_block(X))
+gfa_model = ModelDef(tuple(ents), tuple(blocks), K, False)
+chains["gfa"] = ring_chain(
+    gfa_model, MFData(tuple(payloads), tuple([None] * len(ents))), 4)
+
+for name, traj in chains.items():
+    for key in ("rmse_train", "alpha"):
+        np.testing.assert_allclose(
+            traj[key], golden[name][key], rtol=1e-3, atol=1e-5,
+            err_msg=f"ring {name}.{key} forked off the golden chain")
+    print(name, "ring == golden", traj["rmse_train"])
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_golden_chain_ring_pipeline_no_fork():
+    """The ring-pipelined distributed sweep reproduces the pinned
+    golden trajectories — ring mode does NOT fork
+    ``results/golden_chains.json``, so the fixture regenerates
+    identical whichever pipeline produced the running chain."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env["GOLDEN_FIXTURE"] = os.path.abspath(FIXTURE)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _RING_GOLDEN_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
 
 
 if __name__ == "__main__":

@@ -5,7 +5,18 @@ here we verify the abstract construction — ShapeDtypeStruct pytrees,
 model assembly, eval_shape through init_state and one gibbs_step — at
 both production scale (abstract, no allocation) and a tiny concrete
 scale where the distributed step actually executes on 1 device.
+
+The CLI smoke tests at the bottom cover the argparse surface itself
+(subprocess-based — the module pins a 512-device host platform at
+import): ``--help`` exits 0 naming every cell, and a typo'd ``--cell``
+fails FAST with the list of valid cells — the same
+tell-you-the-right-knobs contract as ``session._prior_by_name``'s
+ValueError — instead of after a 256-chip lowering.
 """
+import os
+import subprocess
+import sys
+
 import jax
 import numpy as np
 
@@ -138,3 +149,51 @@ def test_gfa_cell_builds_multiview_sns_workload():
     for h in st1.hypers[1:]:
         assert set(h) == {"rho", "tau"}
         assert h["rho"].shape == (cell.K,)
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke (subprocess: the module locks 512 host devices at import)
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args, timeout=120):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.mf_dryrun", *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+
+
+def test_cli_help_exits_zero_and_names_every_cell():
+    out = _run_cli("--help")
+    assert out.returncode == 0, out.stderr
+    for flag in ("--cell", "--mesh", "--variant"):
+        assert flag in out.stdout, (flag, out.stdout)
+    for cell in CELLS:
+        assert cell in out.stdout, (cell, out.stdout)
+
+
+def test_cli_unknown_cell_fails_fast_listing_choices():
+    out = _run_cli("--cell", "bogus_cell")
+    assert out.returncode != 0
+    assert out.stdout == ""            # failed before any lowering
+    for cell in list(CELLS) + ["all"]:
+        assert cell in out.stderr, (cell, out.stderr)
+
+
+def test_cli_unknown_mesh_fails_fast():
+    out = _run_cli("--cell", "bmf_chembl", "--mesh", "mega")
+    assert out.returncode != 0
+    assert out.stdout == ""
+    assert "single" in out.stderr and "multi" in out.stderr
+
+
+def test_cli_unknown_variant_fails_fast():
+    """A typo'd --variant must not lower 256 chips and write a
+    baseline-numbers JSON under the bogus tag."""
+    out = _run_cli("--cell", "bmf_chembl", "--variant", "rign")
+    assert out.returncode != 0
+    assert out.stdout == ""
+    for v in ("baseline", "bf16gather", "ring"):
+        assert v in out.stderr, (v, out.stderr)

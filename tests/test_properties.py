@@ -18,7 +18,15 @@ Invariants covered:
     bitwise shard-slice parity for every divisor split;
   * the counter-based row_bernoulli (the spike-and-slab inclusion
     contract) gives the same bitwise shard-slice parity and tracks
-    its probability argument.
+    its probability argument;
+  * the ring pipeline's chunk-accumulated dense Gram/RHS moments
+    (``_dense_chunk_contrib``, folded per ppermute hop in
+    ``distributed._ring_accumulate``) equal the monolithic
+    ``_dense_contrib`` moments for arbitrary chunk counts, UNEVEN
+    chunk widths, masked payloads, and the all-ones-mask
+    ``fully=True`` shared-Gram fast path — and the ring's
+    ``dynamic_update_slice`` view reassembly is bitwise the gathered
+    array for every rotation of the chunk order.
 """
 import jax
 import jax.numpy as jnp
@@ -30,8 +38,10 @@ except ImportError:   # container without dev deps — see requirements-dev.txt
 
 from repro.core import (AdaptiveGaussian, BlockDef, EntityDef,
                         FixedGaussian, MFData, ModelDef, NormalPrior,
-                        ProbitNoise, from_coo, gibbs_step, init_state)
-from repro.core.gibbs import (_sparse_contrib, row_bernoulli,
+                        ProbitNoise, dense_block, from_coo, gibbs_step,
+                        init_state)
+from repro.core.gibbs import (_dense_chunk_contrib, _dense_contrib,
+                              _sparse_contrib, row_bernoulli,
                               row_uniforms)
 from repro.core.noise import _truncnorm
 from repro.kernels import ref
@@ -271,6 +281,95 @@ def test_probit_augment_shard_slices_bitwise(n_shards, seed):
                                   mask[sl], row_offset=rows_per * s)
         np.testing.assert_array_equal(np.asarray(z_part),
                                       np.asarray(z_full)[sl])
+
+
+@st.composite
+def chunked_dense_problem(draw, max_r=10, max_c=32, max_k=5):
+    """A dense block, a fixed factor, and an UNEVEN partition of the
+    fixed-factor rows into chunks (the ring exchange delivers equal
+    chunks, but the chunk math must not depend on that)."""
+    R = draw(st.integers(2, max_r))
+    C = draw(st.integers(2, max_c))
+    K = draw(st.integers(2, max_k))
+    n_chunks = draw(st.integers(1, min(6, C)))
+    fully = draw(st.booleans())
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    cuts = np.sort(rng.choice(np.arange(1, C), size=n_chunks - 1,
+                              replace=False)) if n_chunks > 1 else \
+        np.array([], np.int64)
+    bounds = [0] + [int(c) for c in cuts] + [C]
+    X = rng.normal(size=(R, C)).astype(np.float32)
+    mask = np.ones((R, C), np.float32) if fully else \
+        (rng.random((R, C)) < 0.7).astype(np.float32)
+    F = rng.normal(size=(C, K)).astype(np.float32)
+    return X, mask, F, bounds, fully
+
+
+@settings(max_examples=20, deadline=None)
+@given(chunked_dense_problem(), st.floats(0.5, 4.0))
+def test_dense_chunk_moments_match_monolithic(prob, alpha):
+    """Chunk-accumulated dense Gram/RHS (the ring pipeline's per-hop
+    fold, ``_dense_chunk_contrib``) equals the monolithic
+    ``_dense_contrib`` moments over any partition of the fixed-factor
+    rows — uneven widths, masked payloads, and the all-ones-mask
+    ``fully=True`` shared-Gram fast path — up to f32 summation order."""
+    X, mask, F, bounds, fully = prob
+    payload = dense_block(X, None if fully else mask)
+    assert payload.fully == fully
+    noise = FixedGaussian(alpha)
+    u = jnp.zeros((X.shape[0], F.shape[1]), jnp.float32)
+    gs_m, gr_m, rhs_m = _dense_contrib(payload, True, jnp.asarray(F), u,
+                                       noise, noise.init(),
+                                       jax.random.PRNGKey(0))
+    gs = gr = None
+    rhs = jnp.zeros_like(rhs_m)
+    vals, msk = payload.oriented(True)
+    for c0, c1 in zip(bounds, bounds[1:]):
+        dgs, dgr, drh = _dense_chunk_contrib(vals, msk, fully,
+                                             jnp.asarray(F[c0:c1]),
+                                             jnp.asarray(c0))
+        if dgs is not None:
+            gs = dgs if gs is None else gs + dgs
+        if dgr is not None:
+            gr = dgr if gr is None else gr + dgr
+        rhs = rhs + drh
+    scale = float(jnp.max(jnp.abs(gs_m if gr_m is None else gr_m))) + 1.0
+    if fully:
+        assert gr_m is None and gr is None
+        np.testing.assert_allclose(np.asarray(alpha * gs),
+                                   np.asarray(gs_m), atol=1e-4 * scale)
+    else:
+        assert gs_m is None and gs is None
+        np.testing.assert_allclose(np.asarray(alpha * gr),
+                                   np.asarray(gr_m), atol=1e-4 * scale)
+    np.testing.assert_allclose(np.asarray(alpha * rhs),
+                               np.asarray(rhs_m), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 7), st.integers(2, 6),
+       st.integers(0, 2**31 - 1))
+def test_ring_view_reassembly_bitwise(n_shards, start, width, seed):
+    """The ring's view reassembly (``dynamic_update_slice`` of equal
+    chunks, visited in the shard-dependent rotation ``(s + t) % S``)
+    rebuilds EXACTLY the gathered array — pure data movement, no
+    arithmetic — for every shard's rotation of the chunk order.  This
+    is what makes the ring chain bitwise the eager chain on every
+    gather-indexed (sparse/SnS/probit/metrics) path."""
+    rows_per = 5
+    rng = np.random.default_rng(seed)
+    full = rng.normal(size=(n_shards * rows_per, width)) \
+        .astype(np.float32)
+    s0 = start % n_shards
+    out = jnp.zeros_like(full)
+    for t in range(n_shards):
+        owner = (s0 + t) % n_shards
+        chunk = jnp.asarray(full[owner * rows_per:
+                                 (owner + 1) * rows_per])
+        out = jax.lax.dynamic_update_slice(
+            out, chunk, (jnp.asarray(owner * rows_per), 0))
+    np.testing.assert_array_equal(np.asarray(out), full)
 
 
 @settings(max_examples=15, deadline=None)

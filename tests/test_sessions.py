@@ -185,3 +185,33 @@ def test_dense_all_ones_mask_fast_path():
     m = np.ones_like(X)
     m[0, 0] = 0.0
     assert not dense_block(X, mask=m).fully
+
+
+def test_session_mesh_and_pipeline_knob():
+    """``TrainSession(mesh=..., pipeline=...)`` routes through the
+    explicit distributed sweep: on the degenerate 1-device mesh both
+    exchange pipelines must reproduce the plain single-device session
+    chain exactly (the ring has zero hops, the gather is a no-op —
+    any drift would mean the knob changes the SAMPLED chain, which it
+    never may), and an unknown pipeline fails fast with the valid
+    choices before any sweep runs."""
+    mat, test, _ = _planted(n=64, m=32, density=0.4)
+    from repro.launch.mesh import make_mesh
+
+    def session(**kw):
+        s = TrainSession(num_latent=3, burnin=4, nsamples=4, seed=0, **kw)
+        s.add_train_and_test(mat, test=test, noise=AdaptiveGaussian())
+        return s
+
+    ref = session().run()
+    mesh = make_mesh((1,), ("data",))
+    for pipe in ("eager", "ring"):
+        res = session(mesh=mesh, pipeline=pipe).run()
+        np.testing.assert_allclose(res.rmse_train_trace,
+                                   ref.rmse_train_trace, rtol=1e-5,
+                                   err_msg=pipe)
+        np.testing.assert_allclose(res.rmse_test, ref.rmse_test,
+                                   rtol=1e-5, err_msg=pipe)
+
+    with pytest.raises(ValueError, match="valid pipelines"):
+        session(mesh=mesh, pipeline="warp").run()
