@@ -5,16 +5,24 @@ all views, some are view-specific.  GFA (Normal prior on the shared
 factor, spike-and-slab on the loadings) recovers which factor drives
 which view.
 
-    PYTHONPATH=src python examples/gfa_multiblock.py
+    PYTHONPATH=src python examples/gfa_multiblock.py [--burnin 150]
 """
+import argparse
+
 import numpy as np
 
 from repro.core import GFASession
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--burnin", type=int, default=150)
+    ap.add_argument("--nsamples", type=int, default=150)
+    ap.add_argument("--n", type=int, default=200,
+                    help="shared sample count")
+    args = ap.parse_args()
     rng = np.random.default_rng(0)
-    N = 200
+    N = args.n
     dims = (50, 40, 30)
     # 2 shared factors + 1 specific factor per view
     K_true = 2 + len(dims)
@@ -28,8 +36,8 @@ def main():
                      .astype(np.float32))
         active.append(cols)
 
-    sess = GFASession(views, num_latent=K_true + 2, burnin=150,
-                      nsamples=150, seed=0)
+    sess = GFASession(views, num_latent=K_true + 2, burnin=args.burnin,
+                      nsamples=args.nsamples, seed=0)
     out = sess.run()
 
     print(f"GFA over {len(views)} views, {out['runtime_s']:.1f}s")

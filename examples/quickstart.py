@@ -1,14 +1,18 @@
 """Quickstart: Bayesian Matrix Factorization on compound-activity data.
 
-Mirrors the SMURFF Jupyter quickstart: build a sparse train/test
-split of a ChEMBL-like activity matrix, run BMF with Gibbs sampling,
-report test RMSE.
+Mirrors the SMURFF Jupyter quickstart on the builder API: declare the
+entity/block graph with ``ModelBuilder`` (here the simplest one — two
+entities, one sparse ChEMBL-like activity matrix), run BMF with Gibbs
+sampling, report test RMSE.  The classic ``TrainSession`` remains as a
+thin wrapper over the same builder for the single-matrix case; pass
+``save_freq=``/``save_dir=`` to either to stream posterior samples for
+``PredictSession`` (see examples/compose_multi_matrix.py).
 
     PYTHONPATH=src python examples/quickstart.py [--num-latent 16]
 """
 import argparse
 
-from repro.core import AdaptiveGaussian, TrainSession
+from repro.core import AdaptiveGaussian, ModelBuilder
 from repro.data.synthetic import chembl_like
 
 
@@ -28,11 +32,13 @@ def main():
                                    density=args.density, rank=8,
                                    noise=0.3)
 
-    session = TrainSession(num_latent=args.num_latent,
-                           burnin=args.burnin, nsamples=args.nsamples,
-                           seed=0, verbose=1)
-    session.add_train_and_test(R_train, test=test,
-                               noise=AdaptiveGaussian())
+    builder = ModelBuilder(num_latent=args.num_latent)
+    builder.add_entity("compound", args.compounds)
+    builder.add_entity("protein", args.proteins)
+    builder.add_block("compound", "protein", R_train, test=test,
+                      noise=AdaptiveGaussian())
+    session = builder.session(burnin=args.burnin,
+                              nsamples=args.nsamples, seed=0, verbose=1)
     result = session.run()
 
     print(f"\ntest RMSE  : {result.rmse_test:.4f}")

@@ -1,5 +1,5 @@
-from .ckpt import (CheckpointManager, latest_step, load_pytree,
-                   save_pytree)
+from .ckpt import (CheckpointManager, latest_step, list_steps,
+                   load_pytree, save_pytree)
 
-__all__ = ["CheckpointManager", "latest_step", "load_pytree",
-           "save_pytree"]
+__all__ = ["CheckpointManager", "latest_step", "list_steps",
+           "load_pytree", "save_pytree"]

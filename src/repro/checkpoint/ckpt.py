@@ -70,26 +70,47 @@ def load_pytree(template: Any, path: str) -> Any:
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
-def latest_step(directory: str) -> Optional[int]:
+def list_steps(directory: str) -> List[int]:
+    """Sorted steps with a COMPLETE checkpoint under ``directory``.
+
+    Completeness = the treedef sidecar exists (it is written last,
+    before the atomic rename); a preempted writer's half-saved step
+    never shows up.  Used by both ``CheckpointManager`` and
+    ``core.predict.PredictSession`` (which replays every saved
+    posterior sample rather than just the latest state).
+    """
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := _STEP_RE.match(d))
-             and os.path.exists(os.path.join(directory, d,
-                                             "treedef.json"))]
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(directory)
+                  if (m := _STEP_RE.match(d))
+                  and os.path.exists(os.path.join(directory, d,
+                                                  "treedef.json")))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_steps(directory)
     return max(steps) if steps else None
 
 
 class CheckpointManager:
-    """Async keep-N checkpoint manager."""
+    """Async keep-N checkpoint manager.
 
-    def __init__(self, directory: str, keep: int = 3):
+    ``keep=None`` disables garbage collection entirely — every saved
+    step stays on disk.  That is the posterior-sample store mode: a
+    session streaming samples via ``save_freq`` must retain ALL of
+    them for ``PredictSession`` to average, unlike the rolling-restart
+    checkpoints which only need the last few.
+    """
+
+    def __init__(self, directory: str, keep: Optional[int] = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
 
     def _gc(self) -> None:
+        if self.keep is None:
+            return
         steps = sorted(
             int(m.group(1)) for d in os.listdir(self.dir)
             if (m := _STEP_RE.match(d)))
@@ -128,5 +149,4 @@ class CheckpointManager:
                                  os.path.join(self.dir, f"step_{step}"))
 
     def all_steps(self) -> List[int]:
-        return sorted(int(m.group(1)) for d in os.listdir(self.dir)
-                      if (m := _STEP_RE.match(d)))
+        return list_steps(self.dir)

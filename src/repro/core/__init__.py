@@ -2,7 +2,13 @@
 
 Public API (mirrors the smurff Python package where sensible):
 
-    TrainSession, GFASession, smurff          — session layer
+    ModelBuilder, Session                     — compose any
+                                                entity/block graph
+    TrainSession, GFASession, smurff          — classic session shapes
+                                                (thin builder wrappers)
+    PredictSession                            — averaged prediction
+                                                from saved posterior
+                                                samples (save_freq)
     NormalPrior, MacauPrior, SpikeAndSlabPrior — priors
     FixedGaussian, AdaptiveGaussian, ProbitNoise — noise models
     SparseMatrix, from_coo, from_dense, dense_block — inputs
@@ -12,11 +18,12 @@ from .blocks import (BlockDef, DenseBlock, EntityDef, ModelDef,
                      dense_block)
 from .gibbs import MFData, MFState, gibbs_step, init_state, run_sweeps
 from .noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
-from .predict import (PredictAccumulator, TestSet, auc, make_test_set,
-                      predict_one, rmse)
+from .predict import (PredictAccumulator, PredictSession, TestSet, auc,
+                      make_test_set, predict_one, rmse)
 from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
                      SpikeAndSlabPrior)
-from .session import GFASession, SessionResult, TrainSession, smurff
+from .session import (BlockResult, GFASession, ModelBuilder, Session,
+                      SessionResult, SweepInfo, TrainSession, smurff)
 from .sparse import (PaddedRows, SparseMatrix, from_coo, from_dense,
                      gather_predict, random_sparse)
 
@@ -24,10 +31,11 @@ __all__ = [
     "BlockDef", "DenseBlock", "EntityDef", "ModelDef", "dense_block",
     "MFData", "MFState", "gibbs_step", "init_state", "run_sweeps",
     "AdaptiveGaussian", "FixedGaussian", "ProbitNoise",
-    "PredictAccumulator", "TestSet", "auc", "make_test_set",
-    "predict_one", "rmse",
+    "PredictAccumulator", "PredictSession", "TestSet", "auc",
+    "make_test_set", "predict_one", "rmse",
     "FixedNormalPrior", "MacauPrior", "NormalPrior", "SpikeAndSlabPrior",
-    "GFASession", "SessionResult", "TrainSession", "smurff",
+    "BlockResult", "GFASession", "ModelBuilder", "Session",
+    "SessionResult", "SweepInfo", "TrainSession", "smurff",
     "PaddedRows", "SparseMatrix", "from_coo", "from_dense",
     "gather_predict", "random_sparse",
 ]

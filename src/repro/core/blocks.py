@@ -140,3 +140,30 @@ class ModelDef:
             if b.col_entity == e:
                 out.append((bi, False))
         return out
+
+    @property
+    def entity_names(self) -> Tuple[str, ...]:
+        return tuple(e.name for e in self.entities)
+
+    def entity_index(self, entity) -> int:
+        """Resolve an entity by name or index, with a naming error.
+
+        The builder API addresses entities by name; everything
+        engine-side is positional.  Unknown names/indices raise a
+        ValueError listing the valid choices (the ``_PRIORS``-style
+        contract of the session layer).
+        """
+        if isinstance(entity, str):
+            names = self.entity_names
+            if entity not in names:
+                raise ValueError(
+                    f"unknown entity {entity!r}; entities in this "
+                    f"model: {', '.join(names)}")
+            return names.index(entity)
+        i = int(entity)
+        if not 0 <= i < len(self.entities):
+            raise ValueError(
+                f"entity index {i} out of range; this model has "
+                f"{len(self.entities)} entities: "
+                f"{', '.join(self.entity_names)}")
+        return i

@@ -199,6 +199,49 @@ def data_shardings(model: ModelDef, mesh: Mesh, data: MFData) -> MFData:
     return _with_mesh(mesh, data_specs(model, mesh, data))
 
 
+def distributed_unsupported_reason(model: ModelDef, mesh: Mesh,
+                                   data: Optional[MFData] = None
+                                   ) -> Optional[str]:
+    """Why this model falls off the explicit sweep — None when it fits.
+
+    The predicate behind :func:`distributed_supported`, kept separate
+    so the session layer's pjit-fallback warning can NAME the reason
+    (an arbitrary builder-composed graph has many more ways to miss
+    the subset than the old two hardcoded session shapes did).
+    """
+    S = _n_shards(mesh)
+    for e, ent in enumerate(model.entities):
+        if ent.n_rows % S != 0:
+            return (f"entity {ent.name!r} has {ent.n_rows} rows, not "
+                    f"divisible by the {S}-shard mesh")
+        if not isinstance(ent.prior,
+                          (NormalPrior, MacauPrior, FixedNormalPrior,
+                           SpikeAndSlabPrior)):
+            return (f"entity {ent.name!r} prior "
+                    f"{type(ent.prior).__name__} has no sharded moment "
+                    "algebra")
+        if isinstance(ent.prior, MacauPrior) and (
+                data is None or data.sides[e] is None):
+            return (f"entity {ent.name!r} has a Macau prior but no "
+                    "side-information matrix in the data")
+    for bi, blk in enumerate(model.blocks):
+        if blk.row_entity == blk.col_entity:
+            return (f"block {bi} relates entity {blk.row_entity} to "
+                    "itself (self-blocks are not sharded)")
+        if not isinstance(blk.noise,
+                          (FixedGaussian, AdaptiveGaussian, ProbitNoise)):
+            return (f"block {bi} noise {type(blk.noise).__name__} has "
+                    "no sharded residual reduction")
+        if not blk.sparse and data is not None:
+            payload = data.blocks[bi]
+            # both orientations must be stored for per-shard reads
+            if not isinstance(payload, DenseBlock) \
+                    or getattr(payload, "XT", None) is None:
+                return (f"block {bi} dense payload lacks the stored "
+                        "transposed orientation (use dense_block())")
+    return None
+
+
 def distributed_supported(model: ModelDef, mesh: Mesh,
                           data: Optional[MFData] = None) -> bool:
     """True when the explicit shard_map sweep covers this model.
@@ -213,35 +256,14 @@ def distributed_supported(model: ModelDef, mesh: Mesh,
     counter-based, so shard draws slice the single-device chain), and
     every Table-1 prior including spike-and-slab (counter-based
     ``row_bernoulli``/``row_normals`` coordinate updates + two K-sized
-    hyper psums) — the GFA composition runs the explicit sweep.
-    Outside it (self-blocks, non-dividing row counts, dense payloads
-    without the stored transposed orientation)
-    ``make_distributed_step`` falls back to pjit.
+    hyper psums) — the GFA composition runs the explicit sweep, and so
+    does any multi-relation graph ``ModelBuilder`` composes from the
+    admitted pieces.  Outside it (self-blocks, non-dividing row
+    counts, dense payloads without the stored transposed orientation)
+    ``make_distributed_step`` falls back to pjit;
+    :func:`distributed_unsupported_reason` names the offending piece.
     """
-    S = _n_shards(mesh)
-    for e, ent in enumerate(model.entities):
-        if ent.n_rows % S != 0:
-            return False
-        if not isinstance(ent.prior,
-                          (NormalPrior, MacauPrior, FixedNormalPrior,
-                           SpikeAndSlabPrior)):
-            return False
-        if isinstance(ent.prior, MacauPrior) and (
-                data is None or data.sides[e] is None):
-            return False
-    for bi, blk in enumerate(model.blocks):
-        if blk.row_entity == blk.col_entity:
-            return False
-        if not isinstance(blk.noise,
-                          (FixedGaussian, AdaptiveGaussian, ProbitNoise)):
-            return False
-        if not blk.sparse and data is not None:
-            payload = data.blocks[bi]
-            # both orientations must be stored for per-shard reads
-            if not isinstance(payload, DenseBlock) \
-                    or getattr(payload, "XT", None) is None:
-                return False
-    return True
+    return distributed_unsupported_reason(model, mesh, data) is None
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,12 @@ class MFData(NamedTuple):
 
 def init_state(model: ModelDef, data: MFData, seed: int = 0,
                init_scale: float = 1.0) -> MFState:
+    """Fresh chain state from the STATIC graph alone — ``data`` is
+    accepted for signature symmetry but never read.  That contract is
+    load-bearing: ``modelspec.state_template`` rebuilds checkpoint
+    templates from a ``model.json`` spec with no data payloads, so any
+    future data-dependent initialization must stay out of the state
+    *structure*."""
     key = jax.random.PRNGKey(seed)
     keys = jax.random.split(key, len(model.entities) + 1)
     factors = []

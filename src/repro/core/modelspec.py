@@ -1,0 +1,129 @@
+"""Model-graph (de)serialization for on-disk posterior samples.
+
+A session streaming posterior samples to disk (``Session`` with
+``save_freq > 0``) writes TWO things: the sampled ``MFState`` pytrees
+(via ``checkpoint.CheckpointManager``, one ``step_<sweep>`` per
+retained sample) and ONE ``model.json`` spec produced here.  The spec
+captures the static model graph — entities (name, rows, prior with all
+its hyper-parameters), blocks (which entities, noise, sparse/dense),
+``num_latent`` — which is exactly what ``PredictSession`` needs to
+
+* rebuild an ``MFState`` *template* whose pytree structure matches the
+  saved npz leaves (``state_template``), and
+* know which entities carry a Macau link matrix for out-of-matrix
+  prediction,
+
+WITHOUT the observed data payloads (those are not needed to predict
+from samples, and can be huge).
+
+Priors and noises are frozen dataclasses, so round-tripping is just
+``dataclasses.asdict`` + a ``type`` tag resolved through an explicit
+registry — an unknown tag raises a ValueError naming the valid
+choices, mirroring the session layer's ``_PRIORS`` errors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict
+
+from .blocks import BlockDef, EntityDef, ModelDef
+from .gibbs import MFState
+from .noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
+from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
+                     SpikeAndSlabPrior)
+
+MODEL_SPEC_FILE = "model.json"
+SAMPLES_SUBDIR = "samples"
+
+PRIOR_TYPES = {cls.__name__: cls for cls in
+               (NormalPrior, FixedNormalPrior, MacauPrior,
+                SpikeAndSlabPrior)}
+NOISE_TYPES = {cls.__name__: cls for cls in
+               (FixedGaussian, AdaptiveGaussian, ProbitNoise)}
+
+
+def _to_spec(obj: Any, registry: Dict[str, type], what: str) -> dict:
+    name = type(obj).__name__
+    if name not in registry:
+        raise ValueError(
+            f"cannot serialize {what} {name!r}; serializable {what}s: "
+            f"{', '.join(sorted(registry))}")
+    return {"type": name, **dataclasses.asdict(obj)}
+
+
+def _from_spec(d: dict, registry: Dict[str, type], what: str):
+    d = dict(d)
+    name = d.pop("type", None)
+    if name not in registry:
+        raise ValueError(
+            f"unknown {what} type {name!r} in model spec; valid "
+            f"{what}s: {', '.join(sorted(registry))}")
+    return registry[name](**d)
+
+
+def model_to_spec(model: ModelDef) -> dict:
+    """JSON-safe dict capturing the full static model graph."""
+    return {
+        "format": "repro-mf-model-v1",
+        "num_latent": model.num_latent,
+        "use_pallas": model.use_pallas,
+        "bf16_gather": model.bf16_gather,
+        "entities": [
+            {"name": e.name, "n_rows": e.n_rows,
+             "prior": _to_spec(e.prior, PRIOR_TYPES, "prior")}
+            for e in model.entities],
+        "blocks": [
+            {"row_entity": b.row_entity, "col_entity": b.col_entity,
+             "sparse": b.sparse,
+             "noise": _to_spec(b.noise, NOISE_TYPES, "noise")}
+            for b in model.blocks],
+    }
+
+
+def spec_to_model(spec: dict) -> ModelDef:
+    """Rebuild the ``ModelDef`` (static graph only, no data payloads)."""
+    ents = tuple(
+        EntityDef(e["name"], int(e["n_rows"]),
+                  _from_spec(e["prior"], PRIOR_TYPES, "prior"))
+        for e in spec["entities"])
+    blocks = tuple(
+        BlockDef(int(b["row_entity"]), int(b["col_entity"]),
+                 _from_spec(b["noise"], NOISE_TYPES, "noise"),
+                 bool(b["sparse"]))
+        for b in spec["blocks"])
+    return ModelDef(ents, blocks, int(spec["num_latent"]),
+                    bool(spec.get("use_pallas", False)),
+                    bool(spec.get("bf16_gather", False)))
+
+
+def state_template(model: ModelDef) -> MFState:
+    """An ``MFState`` skeleton structurally identical to a live chain's.
+
+    ``checkpoint.load_pytree`` needs a template with the same pytree
+    structure and leaf shapes as the saved state — so this IS
+    ``gibbs.init_state``, which builds the state from the static graph
+    alone (its ``data`` argument is never read), guaranteeing the
+    template can never drift leaf-for-leaf from what sessions save.
+    The leaf values are irrelevant; ``load_pytree`` overwrites them.
+    """
+    from .gibbs import init_state
+    return init_state(model, None, seed=0)
+
+
+def save_model_spec(path: str, spec: dict) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(spec, f, indent=1)
+    os.replace(tmp, path)
+
+
+def load_model_spec(path: str) -> dict:
+    if not os.path.exists(path):
+        raise ValueError(
+            f"no model spec at {path}; posterior-sample directories are "
+            "written by a Session with save_freq > 0 (TrainSession/"
+            "ModelBuilder.session save_dir=...)")
+    with open(path) as f:
+        return json.load(f)

@@ -4,10 +4,19 @@ SMURFF's predict step (Algorithm 1 "for all test points") evaluated per
 sweep; predictions for the final report average U_s V_s^T over the
 collected posterior samples, which is what makes BMF robust against
 overfitting (paper section 1).
+
+:class:`PredictSession` is the from-disk counterpart: it reloads the
+posterior samples a session streamed out (``save_freq``/``save_dir``)
+and serves averaged predictions without the training data — at
+arbitrary cells of any block, as whole dense blocks, and for rows
+never present in training through the sampled Macau link matrices
+(out-of-matrix prediction, the compound-activity cold-start workflow
+of arXiv:1904.02514).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import os
+from typing import Iterator, List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -95,3 +104,216 @@ class PredictAccumulator:
     def auc(self, threshold: float = 0.5) -> float:
         return auc(np.asarray(self.mean), np.asarray(self.test.v),
                    threshold)
+
+
+# ---------------------------------------------------------------------------
+# from-disk prediction over saved posterior samples
+# ---------------------------------------------------------------------------
+
+class PredictSession:
+    """Serve averaged predictions from a saved posterior-sample store.
+
+    ``save_dir`` is a directory written by a session with
+    ``save_freq > 0``: a ``model.json`` spec (the static entity/block
+    graph — see ``core/modelspec.py``) plus ``samples/step_<sweep>``
+    checkpoints, each holding one full sampled ``MFState``.  No
+    training data is needed: prediction only reads the sampled factors
+    and, for out-of-matrix rows, the sampled Macau link matrices in
+    the hyper state.
+
+    * ``predict(i, j, block=...)`` — posterior-mean prediction at
+      arbitrary cells of a block, the same streaming average the
+      in-session accumulator computes (same kernel, same summation
+      order — a reload reproduces the in-session ``rmse_test`` to
+      float32 tolerance, asserted in tests/test_predict_session.py).
+    * ``predict_all(block=...)`` — the whole dense block's posterior
+      mean (rows x cols).
+    * ``predict_new(entity, F_new, block=...)`` — OUT-of-matrix: rows
+      never present in training, mapped into latent space per sample
+      through the sampled link (``MacauPrior.predict_factor``:
+      ``mu_s + beta_s^T f``) and contracted against that sample's
+      other-entity factor.
+    * ``restore_latest()`` — (step, MFState) of the newest sample, for
+      continuing an interrupted chain (``Session.run(resume=True)``
+      uses the same store).
+
+    Samples are loaded lazily, one at a time — the store can be much
+    bigger than memory.
+    """
+
+    def __init__(self, save_dir: str):
+        from ..checkpoint.ckpt import list_steps
+        from .modelspec import (MODEL_SPEC_FILE, SAMPLES_SUBDIR,
+                                load_model_spec, spec_to_model,
+                                state_template)
+        self.dir = save_dir
+        self.spec = load_model_spec(os.path.join(save_dir,
+                                                 MODEL_SPEC_FILE))
+        self.model = spec_to_model(self.spec)
+        self._template = state_template(self.model)
+        self._samples_dir = os.path.join(save_dir, SAMPLES_SUBDIR)
+        self.steps: List[int] = list_steps(self._samples_dir)
+        if not self.steps:
+            raise ValueError(
+                f"no complete samples under {self._samples_dir}; run "
+                "the session with save_freq > 0 (and let at least one "
+                "post-burnin sweep finish)")
+
+    # -- sample access -----------------------------------------------------
+
+    @property
+    def num_samples(self) -> int:
+        return len(self.steps)
+
+    def load_sample(self, step: int):
+        """The full sampled ``MFState`` saved at global sweep ``step``."""
+        from ..checkpoint.ckpt import load_pytree
+        if step not in self.steps:
+            raise ValueError(
+                f"no sample at step {step}; saved steps: {self.steps}")
+        return load_pytree(self._template,
+                           os.path.join(self._samples_dir,
+                                        f"step_{step}"))
+
+    def samples(self) -> Iterator:
+        """Lazily yield every sampled state, in chain order."""
+        for s in self.steps:
+            yield self.load_sample(s)
+
+    def restore_latest(self) -> Tuple[int, object]:
+        """(step, MFState) of the newest sample — the resume point."""
+        last = self.steps[-1]
+        return last, self.load_sample(last)
+
+    # -- block/entity resolution -------------------------------------------
+
+    def _resolve_block(self, block: Union[int, Tuple[str, str]]
+                       ) -> Tuple[int, bool]:
+        """(block_index, flipped): ``flipped`` means the caller named
+        the pair in the OPPOSITE order to the block's stored
+        orientation — their (i, j) address (col, row) cells and their
+        result axes are transposed.  An integer block always addresses
+        the stored orientation."""
+        model = self.model
+        if isinstance(block, tuple):
+            a = model.entity_index(block[0])
+            b = model.entity_index(block[1])
+            for bi, blk in enumerate(model.blocks):
+                if (blk.row_entity, blk.col_entity) == (a, b):
+                    return bi, False
+                if (blk.row_entity, blk.col_entity) == (b, a):
+                    return bi, True
+            names = model.entity_names
+            pairs = ", ".join(
+                f"({names[blk.row_entity]}, {names[blk.col_entity]})"
+                for blk in model.blocks)
+            raise ValueError(
+                f"no block relates {block!r}; blocks in this model: "
+                f"{pairs}")
+        bi = int(block)
+        if not 0 <= bi < len(model.blocks):
+            raise ValueError(
+                f"block index {bi} out of range; this model has "
+                f"{len(model.blocks)} blocks")
+        return bi, False
+
+    # -- prediction --------------------------------------------------------
+
+    def predict(self, i, j, block: Union[int, Tuple[str, str]] = 0,
+                return_var: bool = False):
+        """Posterior-mean prediction at cells (i[e], j[e]) of a block.
+
+        The identical streaming average the in-session accumulator
+        runs — one ``predict_one`` per sample, summed in chain order —
+        so a reload reproduces the in-session posterior mean at the
+        same cells to float32 tolerance.  A tuple ``block`` addresses
+        (i, j) in the order the tuple names the entities, whichever
+        orientation the block was declared in.
+        """
+        bi, flipped = self._resolve_block(block)
+        blk = self.model.blocks[bi]
+        if flipped:
+            i, j = j, i
+        i = np.asarray(i)
+        test = make_test_set(i, j, np.zeros(i.shape[0], np.float32))
+        acc = PredictAccumulator(test)
+        for st in self.samples():
+            acc.update(jnp.asarray(st.factors[blk.row_entity]),
+                       jnp.asarray(st.factors[blk.col_entity]))
+        if return_var:
+            return np.asarray(acc.mean), np.asarray(acc.var)
+        return np.asarray(acc.mean)
+
+    def predict_all(self, block: Union[int, Tuple[str, str]] = 0
+                    ) -> np.ndarray:
+        """The whole block's posterior-mean prediction.
+
+        Axes follow the order the caller named the entities in a tuple
+        ``block`` (an integer block uses the stored orientation).
+        """
+        bi, flipped = self._resolve_block(block)
+        blk = self.model.blocks[bi]
+        s = None
+        for st in self.samples():
+            p = jnp.asarray(st.factors[blk.row_entity]) \
+                @ jnp.asarray(st.factors[blk.col_entity]).T
+            s = p if s is None else s + p
+        out = np.asarray(s / self.num_samples)
+        return out.T if flipped else out
+
+    def predict_new(self, entity: Union[int, str], F_new,
+                    block: Optional[Union[int, Tuple[str, str]]] = None
+                    ) -> np.ndarray:
+        """Out-of-matrix prediction for UNSEEN rows of ``entity``.
+
+        ``F_new`` (M, D) holds the new rows' side-information features;
+        each retained sample maps them into latent space through ITS
+        link matrix draw (``mu_s + beta_s^T f``, exposed as
+        ``MacauPrior.predict_factor``) and contracts against ITS
+        other-entity factor — averaging after the nonlinearity, the
+        correct posterior-predictive mean.  Returns (M, n_other)
+        predictions against ``block``'s other entity (``block`` may be
+        omitted when only one block touches the entity).
+        """
+        from .priors import MacauPrior
+        model = self.model
+        e = model.entity_index(entity)
+        ent = model.entities[e]
+        if not isinstance(ent.prior, MacauPrior):
+            raise ValueError(
+                f"entity {ent.name!r} has {type(ent.prior).__name__}; "
+                "out-of-matrix prediction needs the Macau "
+                "side-information prior (its sampled beta link maps "
+                "new feature rows to latents) — add_entity(..., "
+                "side_info=F)")
+        touching = model.blocks_touching(e)
+        if block is None:
+            if len(touching) != 1:
+                names = model.entity_names
+                opts = ", ".join(
+                    f"({names[model.blocks[bi].row_entity]}, "
+                    f"{names[model.blocks[bi].col_entity]})"
+                    for bi, _ in touching)
+                raise ValueError(
+                    f"entity {ent.name!r} touches {len(touching)} "
+                    f"blocks ({opts}); pass block= to pick one")
+            bi = touching[0][0]
+        else:
+            bi, _ = self._resolve_block(block)
+            if bi not in [b for b, _ in touching]:
+                raise ValueError(
+                    f"block {block!r} does not touch entity "
+                    f"{ent.name!r}")
+        other = model.blocks[bi].other(e)
+        F_new = np.atleast_2d(np.asarray(F_new, np.float32))
+        if F_new.shape[1] != ent.prior.num_features:
+            raise ValueError(
+                f"F_new has {F_new.shape[1]} features; entity "
+                f"{ent.name!r} was trained with "
+                f"{ent.prior.num_features}")
+        s = None
+        for st in self.samples():
+            u = ent.prior.predict_factor(st.hypers[e], F_new)
+            p = u @ jnp.asarray(st.factors[other]).T
+            s = p if s is None else s + p
+        return np.asarray(s / self.num_samples)

@@ -280,6 +280,23 @@ class MacauPrior:
         m = hyper["mu"][None, :] + side @ hyper["beta"]
         return m @ hyper["Lambda"].T
 
+    def predict_factor(self, hyper, F_new) -> jnp.ndarray:
+        """Latent rows for UNSEEN entities through the sampled link.
+
+        The Macau conditional mean of a row with feature vector f is
+        ``mu + beta^T f``; ``beta``/``mu`` here are the posterior
+        SAMPLES carried in ``hyper`` (``beta`` is resampled every
+        sweep by ``sample_hyper_moments`` and saved with the chain
+        state).  ``PredictSession`` averages this per retained sample
+        for out-of-matrix prediction — whole rows never present in the
+        training matrix, the compound-activity cold-start workflow
+        (Simm et al. 2017; arXiv:1904.02514).
+
+        F_new (M, D) -> (M, K).
+        """
+        F_new = jnp.asarray(F_new, jnp.float32)
+        return hyper["mu"][None, :] + F_new @ hyper["beta"]
+
 
 def _mn_col_mix(Zr: jnp.ndarray, Llam: jnp.ndarray) -> jnp.ndarray:
     """Right-multiply row-mixed noise by Llam^{-T}: Zr @ Llam^{-1}...

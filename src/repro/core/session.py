@@ -1,24 +1,51 @@
-"""High-level session API, mirroring SMURFF's Python ``TrainSession``.
+"""High-level session API: compose any multi-relation model, run it.
+
+The paper's claim is a *framework*: priors x noise x matrix types x
+side information compose freely (Table 1).  The engine underneath
+(``ModelDef``/``BlockDef``/``EntityDef`` + ``gibbs_step`` + the
+shard_map sweep in ``distributed.py``) always handled arbitrary
+entity/block graphs; this module exposes that through a declarative
+builder instead of hardcoded session shapes:
 
     import repro.core as smurff
 
-    session = smurff.TrainSession(num_latent=16, burnin=200,
-                                  nsamples=400, seed=0)
-    session.add_train_and_test(R_train, test=(i, j, v),
-                               noise=smurff.AdaptiveGaussian())
-    session.add_side_info(axis=0, F=features)     # -> Macau
+    b = smurff.ModelBuilder(num_latent=16)
+    b.add_entity("compound", 5000, side_info=ecfp)      # -> Macau
+    b.add_entity("target", 600)
+    b.add_entity("cellline", 60)
+    b.add_block("compound", "target", ic50, test=(i, j, v),
+                noise=smurff.AdaptiveGaussian())
+    b.add_block("compound", "cellline", viability)      # shares entity
+    session = b.session(burnin=200, nsamples=400, seed=0,
+                        save_freq=10, save_dir="run0",
+                        mesh=mesh, pipeline="ring")
     result = session.run()
-    result.rmse_test, result.predictions
+    result.rmse_test, result.blocks[1].rmse_train_trace
 
-Composable exactly like the paper's Table 1: priors x noise x input
-matrix types x side information.  ``GFASession`` builds the multi-block
-group-factor-analysis layout on top of the same engine.
+    p = smurff.PredictSession("run0")                    # from disk
+    p.predict(i_new, j_new)                              # in-matrix
+    p.predict_new("compound", ecfp_new)                  # out-of-matrix
+
+Validation is eager: unknown entity names, duplicate blocks, and
+shape mismatches raise ValueErrors naming the valid choices at
+``add_*`` time, not as shape errors deep inside jit.
+
+``TrainSession`` (one R matrix, two entities) and ``GFASession``
+(star of dense views) remain as thin wrappers over the builder — they
+compose the same ``ModelDef`` graphs they always did, so their sampled
+chains are unchanged (pinned by tests/test_golden_chain.py's wrapper
+replay).  ``save_freq`` streams posterior samples through
+``checkpoint.CheckpointManager``; ``PredictSession`` (core/predict.py)
+reloads them for averaged prediction and ``Session.run(resume=True)``
+continues an interrupted chain from the last complete sample.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -34,8 +61,31 @@ from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
 from .sparse import SparseMatrix
 
 
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BlockResult:
+    """Per-block view of a run: traces + posterior-mean test metrics."""
+
+    block: int
+    entities: Tuple[str, str]
+    rmse_train_trace: List[float]
+    rmse_test_trace: List[float]
+    rmse_test: Optional[float]
+    auc_test: Optional[float]
+    predictions: Optional[np.ndarray]
+    pred_var: Optional[np.ndarray]
+
+
 @dataclasses.dataclass
 class SessionResult:
+    """Result of one chain.  The scalar fields mirror the first block
+    carrying a test set (block 0's train trace for back-compat);
+    ``blocks`` holds every block's traces and metrics for
+    multi-relation models."""
+
     rmse_test: Optional[float]
     auc_test: Optional[float]
     predictions: Optional[np.ndarray]
@@ -46,6 +96,38 @@ class SessionResult:
     runtime_s: float
     state: MFState
     samples: Optional[List[Tuple[np.ndarray, ...]]] = None
+    blocks: List[BlockResult] = dataclasses.field(default_factory=list)
+    factor_means: Optional[List[np.ndarray]] = None
+    save_dir: Optional[str] = None
+
+    def mean_from_samples(self, test: TestSet, row_entity: int = 0,
+                          col_entity: int = 1) -> np.ndarray:
+        """Posterior-mean predictions recomputed from kept samples.
+
+        Replays the in-session accumulator over ``samples`` (requires
+        ``run(keep_samples=True)``) — same ``predict_one`` kernel, same
+        summation order — so for the same test set this reproduces
+        ``predictions`` EXACTLY, not just statistically (asserted in
+        tests/test_predict_session.py).
+        """
+        if self.samples is None:
+            raise ValueError("no samples kept; run(keep_samples=True)")
+        if not isinstance(test, TestSet):
+            test = make_test_set(*test)
+        acc = PredictAccumulator(test)
+        for fs in self.samples:
+            acc.update(jnp.asarray(fs[row_entity]),
+                       jnp.asarray(fs[col_entity]))
+        return np.asarray(acc.mean)
+
+
+class SweepInfo(NamedTuple):
+    """What a per-sweep callback sees (after the sweep completed)."""
+
+    sweep: int          # 0-based global sweep index
+    phase: str          # "burnin" | "sample"
+    state: MFState      # post-sweep sampler state (device arrays)
+    metrics: Dict[str, jnp.ndarray]   # rmse_train_<b> / alpha_<b>
 
 
 _PRIORS = {"normal": NormalPrior, "spikeandslab": SpikeAndSlabPrior,
@@ -65,19 +147,19 @@ def _place_step(model: ModelDef, data: MFData, state: MFState,
                 mesh: Any, pipeline: Optional[str]):
     """(data, state, step) — distributed through ``mesh`` when given.
 
-    Shared by ``TrainSession`` and ``GFASession``: builds the explicit
-    shard_map sweep with the requested exchange ``pipeline``
+    Shared by every session flavor: builds the explicit shard_map
+    sweep with the requested exchange ``pipeline``
     ("eager"/"ring"/None-for-REPRO_PIPELINE) and places data/state on
     the mesh; without a mesh the single-device ``gibbs_step`` runs.
-    Warns when the model falls outside the sharded subset (entity dims
-    must divide the shard count) — the pjit fallback still samples the
+    Warns — naming the offending model piece — when the model falls
+    outside the sharded subset: the pjit fallback still samples the
     same chain, just with partitioner-placed collectives.  The
     ``pipeline`` knob is validated even without a mesh (a typo must
     raise, not silently run the single-device sweep), and asking for a
     pipeline WITH no mesh to run it on warns — there is no exchange to
     pipeline.
     """
-    from .distributed import (distributed_supported,
+    from .distributed import (distributed_unsupported_reason,
                               make_distributed_step, resolve_pipeline)
     resolve_pipeline(pipeline)
     if mesh is None:
@@ -88,36 +170,405 @@ def _place_step(model: ModelDef, data: MFData, state: MFState,
                 "the session runs the single-device sweep",
                 stacklevel=3)
         return data, state, (lambda d, s: gibbs_step(model, d, s))
-    if not distributed_supported(model, mesh, data):
+    reason = distributed_unsupported_reason(model, mesh, data)
+    if reason is not None:
         import warnings
         warnings.warn(
-            "model is outside the sharded subset on this mesh (entity "
-            "dims must divide the shard count); falling back to "
-            "auto-partitioned pjit", stacklevel=3)
+            f"model is outside the sharded subset on this mesh "
+            f"({reason}); falling back to auto-partitioned pjit",
+            stacklevel=3)
     step, ds, ss = make_distributed_step(model, mesh, data, state,
                                          pipeline=pipeline)
     return jax.device_put(data, ds), jax.device_put(state, ss), step
 
 
+# ---------------------------------------------------------------------------
+# the declarative builder
+# ---------------------------------------------------------------------------
+
+class ModelBuilder:
+    """Compose an arbitrary entity/block graph, validated eagerly.
+
+    * ``add_entity(name, n, prior=..., side_info=...)`` declares a
+      latent-factor entity.  ``prior`` is a registry name ("normal",
+      "spikeandslab", "fixednormal") or a prior instance; passing
+      ``side_info`` (an (n, D) feature matrix) selects the Macau
+      prior with a sampled link matrix instead.
+    * ``add_block(ent_a, ent_b, data, noise=..., test=...)`` relates
+      two entities through an observed matrix — a ``SparseMatrix``,
+      a dense ndarray (optionally with ``mask=``), or a prebuilt
+      ``DenseBlock``.  ``test=(i, j, v)`` attaches per-block test
+      triplets evaluated by posterior-mean prediction.
+
+    Entities may be shared by any number of blocks (the two-relation
+    compound x target / compound x cell-line layout, GFA's view star,
+    tensor-style chains ...).  Every mistake — unknown or duplicate
+    names, shape mismatches, self-blocks — raises a ValueError naming
+    the valid choices at ``add_*`` time.
+
+    ``build()`` returns the engine triple; ``session(...)`` wraps it
+    in a runnable :class:`Session` carrying the ``mesh=``/``pipeline=``
+    distribution knobs, ``save_freq``/``save_dir`` posterior-sample
+    streaming, and per-sweep ``callbacks``.
+    """
+
+    def __init__(self, num_latent: int = 16, use_pallas: bool = False,
+                 bf16_gather: bool = False):
+        self.num_latent = num_latent
+        self.use_pallas = use_pallas
+        self.bf16_gather = bf16_gather
+        self._entities: List[Tuple[str, int, Any,
+                                   Optional[np.ndarray]]] = []
+        self._blocks: List[Tuple[str, str, Any, Any,
+                                 Optional[TestSet]]] = []
+
+    # -- entities ----------------------------------------------------------
+
+    def _names(self) -> List[str]:
+        return [name for name, *_ in self._entities]
+
+    def add_entity(self, name: str, n: int,
+                   prior: Union[str, Any] = "normal",
+                   side_info: Optional[np.ndarray] = None,
+                   beta_precision: float = 5.0,
+                   sample_beta_precision: bool = True) -> "ModelBuilder":
+        if name in self._names():
+            raise ValueError(
+                f"duplicate entity {name!r}; entities already added: "
+                f"{', '.join(self._names())}")
+        n = int(n)
+        if n <= 0:
+            raise ValueError(f"entity {name!r} needs n > 0, got {n}")
+        side = None
+        if side_info is not None:
+            if not isinstance(prior, str) or prior != "normal":
+                raise ValueError(
+                    f"entity {name!r}: pass either prior= or "
+                    "side_info=, not both — side information selects "
+                    "the macau prior automatically")
+            side = np.asarray(side_info, np.float32)
+            if side.ndim != 2 or side.shape[0] != n:
+                raise ValueError(
+                    f"entity {name!r} side_info must be ({n}, D), got "
+                    f"{side.shape}")
+            p = MacauPrior(self.num_latent, side.shape[1],
+                           beta_precision=beta_precision,
+                           sample_beta_precision=sample_beta_precision)
+        elif isinstance(prior, str):
+            p = _prior_by_name(
+                prior.replace("-", "").replace("_", "").lower(),
+                self.num_latent)
+        else:
+            p = prior
+            pk = getattr(p, "num_latent", None)
+            if pk is not None and pk != self.num_latent:
+                raise ValueError(
+                    f"entity {name!r} prior {type(p).__name__} has "
+                    f"num_latent={pk}, but the builder composes a "
+                    f"num_latent={self.num_latent} model")
+        self._entities.append((name, n, p, side))
+        return self
+
+    # -- blocks ------------------------------------------------------------
+
+    def _entity_index(self, name: str) -> int:
+        names = self._names()
+        if name not in names:
+            known = ", ".join(names) if names else "(none yet)"
+            raise ValueError(
+                f"unknown entity {name!r}; entities added so far: "
+                f"{known} — add_entity first")
+        return names.index(name)
+
+    def add_block(self, row_entity: str, col_entity: str, data,
+                  noise: Any = None, test=None,
+                  mask: Optional[np.ndarray] = None) -> "ModelBuilder":
+        ri = self._entity_index(row_entity)
+        ci = self._entity_index(col_entity)
+        if ri == ci:
+            raise ValueError(
+                f"block {row_entity!r} x {col_entity!r} relates an "
+                "entity to itself; blocks must relate two distinct "
+                "entities")
+        for r2, c2, *_ in self._blocks:
+            if {r2, c2} == {row_entity, col_entity}:
+                raise ValueError(
+                    f"duplicate block {row_entity!r} x {col_entity!r}: "
+                    f"the pair already carries the {r2!r} x {c2!r} "
+                    "block (one observed matrix per entity pair)")
+        if isinstance(data, (SparseMatrix, DenseBlock)):
+            if mask is not None:
+                raise ValueError("mask= only applies to raw dense "
+                                 "ndarray data")
+            payload = data
+        else:
+            payload = dense_block(np.asarray(data, np.float32), mask)
+        want = (self._entities[ri][1], self._entities[ci][1])
+        got = tuple(payload.shape)
+        if got != want:
+            raise ValueError(
+                f"block {row_entity!r} x {col_entity!r} data has shape "
+                f"{got}, expected {want} "
+                f"({row_entity}={want[0]} rows x {col_entity}={want[1]}"
+                " cols)")
+        ts = None
+        if test is not None:
+            ts = test if isinstance(test, TestSet) else make_test_set(*test)
+        self._blocks.append((row_entity, col_entity, payload,
+                             noise if noise is not None
+                             else FixedGaussian(5.0), ts))
+        return self
+
+    # -- build -------------------------------------------------------------
+
+    def build(self) -> Tuple[ModelDef, MFData, Dict[int, TestSet]]:
+        """(ModelDef, MFData, {block_index: TestSet}) for the engine."""
+        if not self._entities:
+            raise ValueError("empty model: add_entity at least two "
+                             "entities and add_block a matrix")
+        if not self._blocks:
+            raise ValueError(
+                "model has no blocks: add_block at least one observed "
+                f"matrix between entities {', '.join(self._names())}")
+        ents = tuple(EntityDef(name, n, prior)
+                     for name, n, prior, _ in self._entities)
+        blocks = tuple(
+            BlockDef(self._entity_index(r), self._entity_index(c),
+                     noise, isinstance(payload, SparseMatrix))
+            for r, c, payload, noise, _ in self._blocks)
+        model = ModelDef(ents, blocks, self.num_latent, self.use_pallas,
+                         self.bf16_gather)
+        sides = tuple(None if s is None else jnp.asarray(s)
+                      for *_, s in self._entities)
+        data = MFData(tuple(p for _, _, p, _, _ in self._blocks), sides)
+        tests = {bi: ts for bi, (*_, ts) in enumerate(self._blocks)
+                 if ts is not None}
+        return model, data, tests
+
+    def session(self, **kwargs) -> "Session":
+        model, data, tests = self.build()
+        return Session(model, data, tests=tests, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# the generic run loop
+# ---------------------------------------------------------------------------
+
+class Session:
+    """Run a Gibbs chain over any built model graph.
+
+    * ``mesh=`` routes through the explicit distributed sweep
+      (``make_distributed_step``); ``pipeline`` selects the
+      fixed-factor exchange — ``"eager"`` (one all-gather per
+      half-sweep) or ``"ring"`` (``n_shards - 1`` double-buffered
+      ppermute hops).  ``None`` defers to ``REPRO_PIPELINE``; either
+      way the sampled chain matches the single-device one at
+      reduction-order tolerance (counter-based per-row RNG — see
+      ``core/distributed.py``).
+    * ``save_freq=k`` streams every k-th post-burnin sample (the full
+      ``MFState``) to ``save_dir`` through
+      ``checkpoint.CheckpointManager`` plus a ``model.json`` spec —
+      the on-disk layout :class:`~repro.core.predict.PredictSession`
+      reloads; ``run(resume=True)`` continues an interrupted chain
+      from the last complete sample on disk.
+    * ``callbacks`` are called after every sweep with a
+      :class:`SweepInfo` (trace collection, convergence monitors,
+      extra checkpointing ...).
+    """
+
+    def __init__(self, model: ModelDef, data: MFData, *,
+                 tests: Optional[Dict[int, TestSet]] = None,
+                 burnin: int = 100, nsamples: int = 100, seed: int = 0,
+                 mesh: Any = None, pipeline: Optional[str] = None,
+                 save_freq: int = 0, save_dir: Optional[str] = None,
+                 verbose: int = 0,
+                 callbacks: Sequence[Callable[[SweepInfo], None]] = (),
+                 init_transform: Optional[Callable[[MFState],
+                                                   MFState]] = None,
+                 accumulate_factor_means: bool = False):
+        self.model = model
+        self.data = data
+        self.tests = dict(tests or {})
+        for bi in self.tests:
+            if not 0 <= bi < len(model.blocks):
+                raise ValueError(
+                    f"test set attached to block {bi}, but the model "
+                    f"has blocks 0..{len(model.blocks) - 1}")
+        self.burnin = burnin
+        self.nsamples = nsamples
+        self.seed = seed
+        self.mesh = mesh
+        self.pipeline = pipeline
+        self.save_freq = save_freq
+        self.save_dir = save_dir
+        self.verbose = verbose
+        self.callbacks = tuple(callbacks)
+        self.init_transform = init_transform
+        self.accumulate_factor_means = accumulate_factor_means
+        if save_freq and not save_dir:
+            raise ValueError(
+                "save_freq > 0 streams posterior samples to disk; "
+                "pass save_dir= too")
+
+    # -- persistence -------------------------------------------------------
+
+    def _make_saver(self):
+        from ..checkpoint import CheckpointManager
+        from .modelspec import (MODEL_SPEC_FILE, SAMPLES_SUBDIR,
+                                model_to_spec, save_model_spec)
+        os.makedirs(self.save_dir, exist_ok=True)
+        spec = model_to_spec(self.model)
+        spec["run"] = {"burnin": self.burnin, "nsamples": self.nsamples,
+                       "save_freq": self.save_freq, "seed": self.seed}
+        save_model_spec(os.path.join(self.save_dir, MODEL_SPEC_FILE),
+                        spec)
+        # keep=None: a posterior-sample store retains EVERY step
+        return CheckpointManager(
+            os.path.join(self.save_dir, SAMPLES_SUBDIR), keep=None)
+
+    # -- run ---------------------------------------------------------------
+
+    def run(self, keep_samples: bool = False,
+            resume: bool = False) -> SessionResult:
+        model, data = self.model, self.data
+        state = init_state(model, data, self.seed)
+        if self.init_transform is not None:
+            state = self.init_transform(state)
+
+        saver = None
+        start = 0
+        if self.save_freq:
+            saver = self._make_saver()
+            if resume:
+                restored = saver.restore_latest(state)
+                if restored is not None:
+                    start, state = restored
+        elif resume:
+            raise ValueError(
+                "resume=True needs save_freq > 0 and a save_dir "
+                "holding the interrupted chain's samples")
+
+        data, state, step = _place_step(model, data, state, self.mesh,
+                                        self.pipeline)
+        accs = {bi: PredictAccumulator(ts)
+                for bi, ts in self.tests.items()}
+        t0 = time.perf_counter()
+        n_blocks = len(model.blocks)
+        train_traces: List[List[float]] = [[] for _ in range(n_blocks)]
+        test_traces: Dict[int, List[float]] = {bi: []
+                                               for bi in self.tests}
+        samples: List[Tuple[np.ndarray, ...]] = []
+        sums = None
+        if self.accumulate_factor_means:
+            sums = [jnp.zeros((e.n_rows, model.num_latent))
+                    for e in model.entities]
+        n_acc = 0
+
+        total = self.burnin + self.nsamples
+        for sweep in range(start, total):
+            state, metrics = step(data, state)
+            for bi in range(n_blocks):
+                train_traces[bi].append(
+                    float(metrics[f"rmse_train_{bi}"]))
+            in_sampling = sweep >= self.burnin
+            if in_sampling:
+                for bi, acc in accs.items():
+                    blk = model.blocks[bi]
+                    acc.update(state.factors[blk.row_entity],
+                               state.factors[blk.col_entity])
+                    test_traces[bi].append(
+                        float(jnp.sqrt(jnp.mean(
+                            (acc.mean - acc.test.v) ** 2))))
+                if keep_samples:
+                    samples.append(tuple(np.asarray(f)
+                                         for f in state.factors))
+                if sums is not None:
+                    sums = [s + f for s, f in zip(sums, state.factors)]
+                    n_acc += 1
+                if saver is not None and \
+                        (sweep - self.burnin + 1) % self.save_freq == 0:
+                    saver.save(sweep + 1, state)
+            if self.verbose and (sweep % max(1, total // 20) == 0):
+                ph = "burnin" if sweep < self.burnin else "sample"
+                print(f"[{ph} {sweep:4d}] rmse_train="
+                      f"{train_traces[0][-1]:.4f}")
+            if self.callbacks:
+                info = SweepInfo(
+                    sweep, "sample" if in_sampling else "burnin",
+                    state, metrics)
+                for cb in self.callbacks:
+                    cb(info)
+        if saver is not None:
+            saver.wait()
+
+        runtime = time.perf_counter() - t0
+        names = model.entity_names
+        block_results: List[BlockResult] = []
+        head: Optional[BlockResult] = None
+        for bi, blk in enumerate(model.blocks):
+            acc = accs.get(bi)
+            if acc is not None and acc.n == 0:
+                acc = None   # resumed past the end: nothing accumulated
+            is_probit = isinstance(blk.noise, ProbitNoise)
+            br = BlockResult(
+                block=bi,
+                entities=(names[blk.row_entity], names[blk.col_entity]),
+                rmse_train_trace=train_traces[bi],
+                rmse_test_trace=test_traces.get(bi, []),
+                rmse_test=(acc.rmse() if acc else None),
+                auc_test=(acc.auc() if (acc and is_probit) else None),
+                predictions=(np.asarray(acc.mean) if acc else None),
+                pred_var=(np.asarray(acc.var) if acc else None))
+            block_results.append(br)
+            if head is None and acc is not None:
+                head = br
+        if head is None:
+            head = block_results[0]
+        means = None
+        if sums is not None:
+            means = [np.asarray(s / max(n_acc, 1)) for s in sums]
+        return SessionResult(
+            rmse_test=head.rmse_test,
+            auc_test=head.auc_test,
+            predictions=head.predictions,
+            pred_var=head.pred_var,
+            rmse_train_trace=train_traces[0],
+            rmse_test_trace=head.rmse_test_trace,
+            nsamples=self.nsamples,
+            runtime_s=runtime,
+            state=state,
+            samples=samples if keep_samples else None,
+            blocks=block_results,
+            factor_means=means,
+            save_dir=self.save_dir,
+        )
+
+
+# ---------------------------------------------------------------------------
+# the classic shapes, as thin wrappers over the builder
+# ---------------------------------------------------------------------------
+
 class TrainSession:
     """Single-R-matrix session (BMF / Macau / probit variants).
 
-    Pass ``mesh`` to run the chain through the explicit distributed
-    sweep (``make_distributed_step``); ``pipeline`` then selects the
-    fixed-factor exchange — ``"eager"`` (one all-gather per half-sweep)
-    or ``"ring"`` (``n_shards - 1`` double-buffered ppermute hops
-    overlapping the local solves).  ``None`` defers to the
-    ``REPRO_PIPELINE`` environment variable; either way the sampled
-    chain matches the single-device one at reduction-order tolerance
-    (counter-based per-row RNG — see ``core/distributed.py``).
+    A thin wrapper over :class:`ModelBuilder`: two entities ("rows",
+    "cols"), one block — it composes the identical ``ModelDef`` graph
+    the pre-builder session did, so the sampled chain is unchanged
+    (tests/test_golden_chain.py replays it against the engine chain
+    bitwise).  Pass ``mesh`` to run the chain through the explicit
+    distributed sweep and ``pipeline`` to select the fixed-factor
+    exchange ("eager" all-gather vs "ring" ppermute hops; None defers
+    to ``REPRO_PIPELINE``).  ``save_freq``/``save_dir`` stream
+    posterior samples for :class:`~repro.core.predict.PredictSession`.
     """
 
     def __init__(self, num_latent: int = 16, burnin: int = 100,
                  nsamples: int = 100, seed: int = 0,
                  priors: Sequence[str] = ("normal", "normal"),
                  use_pallas: bool = False, verbose: int = 0,
-                 save_freq: int = 0, mesh: Any = None,
-                 pipeline: Optional[str] = None):
+                 save_freq: int = 0, save_dir: Optional[str] = None,
+                 mesh: Any = None, pipeline: Optional[str] = None,
+                 callbacks: Sequence[Callable[[SweepInfo], None]] = ()):
         self.num_latent = num_latent
         self.burnin = burnin
         self.nsamples = nsamples
@@ -127,8 +578,10 @@ class TrainSession:
         self.use_pallas = use_pallas
         self.verbose = verbose
         self.save_freq = save_freq
+        self.save_dir = save_dir
         self.mesh = mesh
         self.pipeline = pipeline
+        self.callbacks = callbacks
         self._train: Optional[Any] = None
         self._test: Optional[TestSet] = None
         self._noise: Any = FixedGaussian(5.0)
@@ -160,98 +613,67 @@ class TrainSession:
 
     # -- model assembly ----------------------------------------------------
 
-    def _build(self) -> Tuple[ModelDef, MFData]:
+    def _builder(self) -> ModelBuilder:
         assert self._train is not None, "call add_train_and_test first"
         n_rows, n_cols = self._train.shape
-        ents = []
+        b = ModelBuilder(self.num_latent, self.use_pallas)
         for axis, (name, n) in enumerate((("rows", n_rows),
                                           ("cols", n_cols))):
             side = self._sides[axis]
             if side is not None:
-                prior = MacauPrior(
-                    self.num_latent, side.shape[1],
+                b.add_entity(
+                    name, n, side_info=side,
                     beta_precision=self._beta_precision,
                     sample_beta_precision=self._sample_beta_precision)
             else:
-                prior = _prior_by_name(self.prior_names[axis],
-                                       self.num_latent)
-            ents.append(EntityDef(name, n, prior))
-        sparse = isinstance(self._train, SparseMatrix)
-        model = ModelDef(tuple(ents),
-                         (BlockDef(0, 1, self._noise, sparse),),
-                         self.num_latent, self.use_pallas)
-        sides = tuple(None if s is None else jnp.asarray(s)
-                      for s in self._sides)
-        data = MFData((self._train,), sides)
+                b.add_entity(name, n, prior=self.prior_names[axis])
+        b.add_block("rows", "cols", self._train, noise=self._noise,
+                    test=self._test)
+        return b
+
+    def _build(self) -> Tuple[ModelDef, MFData]:
+        """(ModelDef, MFData) — the benchmark/driver entry point."""
+        model, data, _ = self._builder().build()
         return model, data
 
     # -- run ---------------------------------------------------------------
 
-    def run(self, keep_samples: bool = False) -> SessionResult:
-        model, data = self._build()
-        state = init_state(model, data, self.seed)
-        data, state, step = _place_step(model, data, state, self.mesh,
-                                        self.pipeline)
-        acc = PredictAccumulator(self._test) if self._test else None
-        t0 = time.perf_counter()
-        train_trace, test_trace = [], []
-        samples: List[Tuple[np.ndarray, ...]] = []
-
-        total = self.burnin + self.nsamples
-        for sweep in range(total):
-            state, metrics = step(data, state)
-            train_trace.append(float(metrics["rmse_train_0"]))
-            if sweep >= self.burnin:
-                if acc is not None:
-                    acc.update(state.factors[0], state.factors[1])
-                    test_trace.append(
-                        float(jnp.sqrt(jnp.mean(
-                            (acc.mean - acc.test.v) ** 2))))
-                if keep_samples:
-                    samples.append(tuple(np.asarray(f)
-                                         for f in state.factors))
-            if self.verbose and (sweep % max(1, total // 20) == 0):
-                ph = "burnin" if sweep < self.burnin else "sample"
-                print(f"[{ph} {sweep:4d}] rmse_train="
-                      f"{train_trace[-1]:.4f}")
-
-        runtime = time.perf_counter() - t0
-        is_probit = isinstance(self._noise, ProbitNoise)
-        return SessionResult(
-            rmse_test=(acc.rmse() if acc else None),
-            auc_test=(acc.auc() if (acc and is_probit) else None),
-            predictions=(np.asarray(acc.mean) if acc else None),
-            pred_var=(np.asarray(acc.var) if acc else None),
-            rmse_train_trace=train_trace,
-            rmse_test_trace=test_trace,
-            nsamples=self.nsamples,
-            runtime_s=runtime,
-            state=state,
-            samples=samples if keep_samples else None,
-        )
+    def run(self, keep_samples: bool = False,
+            resume: bool = False) -> SessionResult:
+        sess = self._builder().session(
+            burnin=self.burnin, nsamples=self.nsamples, seed=self.seed,
+            mesh=self.mesh, pipeline=self.pipeline,
+            save_freq=self.save_freq, save_dir=self.save_dir,
+            verbose=self.verbose, callbacks=self.callbacks)
+        return sess.run(keep_samples=keep_samples, resume=resume)
 
 
 class GFASession:
     """Group Factor Analysis: M views sharing a sample entity.
 
     views: list of (N, D_m) dense arrays.  The shared entity gets a
-    Normal prior; each view's loading matrix gets the spike-and-slab
-    prior (paper Table 1, GFA row: "Normal + SnS").
+    fixed-Normal prior; each view's loading matrix gets the
+    spike-and-slab prior (paper Table 1, GFA row: "Normal + SnS").
+    A thin wrapper over :class:`ModelBuilder` — the view star it
+    composes is the identical ``ModelDef`` graph as before the
+    builder, so the sampled chain is unchanged.
 
     Pass ``mesh`` to run the chain through the explicit distributed
-    sweep (``make_distributed_step``): the spike-and-slab coordinate
-    updates are counter-based per global row, so the sharded chain
-    matches this single-device one at reduction-order tolerance — GFA
-    is in the sharded subset, not on a pjit fallback.  ``pipeline``
-    selects the fixed-factor exchange ("eager" all-gather vs "ring"
-    ppermute hops; None defers to ``REPRO_PIPELINE``).
+    sweep: the spike-and-slab coordinate updates are counter-based per
+    global row, so the sharded chain matches this single-device one at
+    reduction-order tolerance — GFA is in the sharded subset, not on a
+    pjit fallback.  ``pipeline`` selects the fixed-factor exchange
+    ("eager" all-gather vs "ring" ppermute hops; None defers to
+    ``REPRO_PIPELINE``).
     """
 
     def __init__(self, views: Sequence[np.ndarray], num_latent: int = 8,
                  burnin: int = 200, nsamples: int = 200, seed: int = 0,
                  noise: Any = None, use_pallas: bool = False,
                  zero_init_loadings: bool = True, mesh: Any = None,
-                 pipeline: Optional[str] = None):
+                 pipeline: Optional[str] = None,
+                 save_freq: int = 0, save_dir: Optional[str] = None,
+                 callbacks: Sequence[Callable[[SweepInfo], None]] = ()):
         self.views = [np.asarray(v, np.float32) for v in views]
         self.num_latent = num_latent
         self.burnin = burnin
@@ -267,67 +689,69 @@ class GFASession:
         self.zero_init_loadings = zero_init_loadings
         self.mesh = mesh
         self.pipeline = pipeline
+        self.save_freq = save_freq
+        self.save_dir = save_dir
+        self.callbacks = callbacks
 
-    def _build(self) -> Tuple[ModelDef, MFData]:
+    def _builder(self) -> ModelBuilder:
         N = self.views[0].shape[0]
+        b = ModelBuilder(self.num_latent, self.use_pallas)
         # GFA pins Z ~ N(0, I) (fixed); SnS on the loadings does the
         # component selection (see FixedNormalPrior docstring).
-        ents = [EntityDef("samples", N, FixedNormalPrior(self.num_latent))]
-        blocks = []
-        payloads = []
+        b.add_entity("samples", N, prior=FixedNormalPrior(self.num_latent))
         for m, X in enumerate(self.views):
-            assert X.shape[0] == N, "views must share the sample axis"
-            ents.append(EntityDef(f"view{m}", X.shape[1],
-                                  SpikeAndSlabPrior(self.num_latent)))
-            blocks.append(BlockDef(0, m + 1, self.noise, sparse=False))
-            payloads.append(dense_block(X))
-        model = ModelDef(tuple(ents), tuple(blocks), self.num_latent,
-                         self.use_pallas)
-        data = MFData(tuple(payloads), tuple([None] * len(ents)))
+            b.add_entity(f"view{m}", X.shape[1],
+                         prior=SpikeAndSlabPrior(self.num_latent))
+            b.add_block("samples", f"view{m}", X, noise=self.noise)
+        return b
+
+    def _build(self) -> Tuple[ModelDef, MFData]:
+        model, data, _ = self._builder().build()
         return model, data
 
-    def run(self) -> Dict[str, Any]:
-        model, data = self._build()
-        state = init_state(model, data, self.seed)
-        if self.zero_init_loadings:
-            fs = list(state.factors)
-            for e in range(1, len(fs)):
-                fs[e] = jnp.zeros_like(fs[e])
-            state = state._replace(factors=tuple(fs))
-        data, state, step = _place_step(model, data, state, self.mesh,
-                                        self.pipeline)
-        t0 = time.perf_counter()
-        train_traces: List[List[float]] = [[] for _ in self.views]
-        # posterior means of Z and the W_m
-        sums = [jnp.zeros((e.n_rows, self.num_latent))
-                for e in model.entities]
-        n_acc = 0
-        for sweep in range(self.burnin + self.nsamples):
-            state, metrics = step(data, state)
-            for m in range(len(self.views)):
-                train_traces[m].append(float(metrics[f"rmse_train_{m}"]))
-            if sweep >= self.burnin:
-                sums = [s + f for s, f in zip(sums, state.factors)]
-                n_acc += 1
-        means = [np.asarray(s / max(n_acc, 1)) for s in sums]
+    def _zero_loadings(self, state: MFState) -> MFState:
+        fs = list(state.factors)
+        for e in range(1, len(fs)):
+            fs[e] = jnp.zeros_like(fs[e])
+        return state._replace(factors=tuple(fs))
+
+    def run(self, resume: bool = False) -> Dict[str, Any]:
+        sess = self._builder().session(
+            burnin=self.burnin, nsamples=self.nsamples, seed=self.seed,
+            mesh=self.mesh, pipeline=self.pipeline,
+            save_freq=self.save_freq, save_dir=self.save_dir,
+            callbacks=self.callbacks,
+            init_transform=(self._zero_loadings
+                            if self.zero_init_loadings else None),
+            accumulate_factor_means=True)
+        r = sess.run(resume=resume)
         return {
-            "Z": means[0],
-            "W": means[1:],
-            "Z_last": np.asarray(state.factors[0]),
-            "W_last": [np.asarray(f) for f in state.factors[1:]],
-            "rmse_train": train_traces,
-            "runtime_s": time.perf_counter() - t0,
-            "state": state,
+            "Z": r.factor_means[0],
+            "W": r.factor_means[1:],
+            "Z_last": np.asarray(r.state.factors[0]),
+            "W_last": [np.asarray(f) for f in r.state.factors[1:]],
+            "rmse_train": [b.rmse_train_trace for b in r.blocks],
+            "runtime_s": r.runtime_s,
+            "state": r.state,
+            "result": r,
         }
 
 
 def smurff(train, test=None, side_info=(None, None), num_latent=16,
            burnin=100, nsamples=100, noise=None, seed=0,
-           use_pallas=False, verbose=0) -> SessionResult:
-    """One-call convenience API (mirrors ``smurff.smurff(...)``)."""
+           use_pallas=False, verbose=0, mesh=None, pipeline=None,
+           save_freq=0, save_dir=None) -> SessionResult:
+    """One-call convenience API (mirrors ``smurff.smurff(...)``).
+
+    Forwards the full knob set — including ``mesh``/``pipeline``
+    (distributed sweep + exchange pipeline) and ``save_freq``/
+    ``save_dir`` (posterior-sample streaming for ``PredictSession``).
+    """
     sess = TrainSession(num_latent=num_latent, burnin=burnin,
                         nsamples=nsamples, seed=seed,
-                        use_pallas=use_pallas, verbose=verbose)
+                        use_pallas=use_pallas, verbose=verbose,
+                        mesh=mesh, pipeline=pipeline,
+                        save_freq=save_freq, save_dir=save_dir)
     sess.add_train_and_test(train, test=test, noise=noise)
     for axis, F in enumerate(side_info):
         if F is not None:

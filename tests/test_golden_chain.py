@@ -111,6 +111,71 @@ def test_golden_chain_trajectories():
                         "docstring)")
 
 
+def test_wrappers_replay_golden_chain():
+    """The session wrappers (now thin layers over ``ModelBuilder``)
+    compose the IDENTICAL model graphs the engine fixtures pin:
+    ``TrainSession`` replays the gaussian/probit chains and
+    ``GFASession(zero_init_loadings=False)`` the GFA chain —
+    BITWISE against the in-process engine chain (same jit program,
+    same RNG stream) and at the usual tolerance against the on-disk
+    fixture.  The builder redesign provably forks no sampled chain."""
+    from repro.core import (AdaptiveGaussian, GFASession, ProbitNoise,
+                            TrainSession)
+    from repro.core.sparse import random_sparse
+
+    with open(FIXTURE) as f:
+        golden = json.load(f)["chains"]
+    engine = _run_all()
+
+    def trace_cb(store):
+        def cb(info):
+            store["rmse_train"].append(
+                float(info.metrics["rmse_train_0"]))
+            store["alpha"].append(float(info.metrics["alpha_0"]))
+        return cb
+
+    got = {}
+    for name in ("gaussian", "probit"):
+        binary = name == "probit"
+        mat, _, _ = random_sparse(SEED, (48, 32), 0.3, rank=3,
+                                  binary=binary)
+        store = {"rmse_train": [], "alpha": []}
+        s = TrainSession(num_latent=4, burnin=SWEEPS, nsamples=0,
+                         seed=SEED, callbacks=[trace_cb(store)])
+        s.add_train_and_test(
+            mat, noise=ProbitNoise() if binary else AdaptiveGaussian())
+        s.run()
+        got[name] = store
+
+    rng = np.random.default_rng(SEED)
+    N, dims, K = 48, (16, 12), 4
+    Z = rng.normal(size=(N, K)).astype(np.float32)
+    views = []
+    for m, D in enumerate(dims):
+        W = rng.normal(size=(D, K)).astype(np.float32)
+        views.append((Z @ W.T + 0.1 * rng.normal(size=(N, D)))
+                     .astype(np.float32))
+    store = {"rmse_train": [], "alpha": []}
+    GFASession(views, num_latent=K, burnin=SWEEPS, nsamples=0,
+               seed=SEED, zero_init_loadings=False,
+               callbacks=[trace_cb(store)]).run()
+    got["gfa"] = store
+
+    for name, traj in got.items():
+        for key in ("rmse_train", "alpha"):
+            # bitwise vs the engine chain computed in this process
+            np.testing.assert_array_equal(
+                traj[key], engine[name][key],
+                err_msg=f"wrapper {name}.{key} forked off the engine "
+                        "chain — the builder rewrite changed the "
+                        "sampled draws")
+            # and within reduction-order tolerance of the fixture
+            np.testing.assert_allclose(
+                traj[key], golden[name][key], rtol=1e-3, atol=1e-5,
+                err_msg=f"wrapper {name}.{key} drifted off the golden "
+                        "fixture")
+
+
 _RING_GOLDEN_SCRIPT = r"""
 import json, os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
