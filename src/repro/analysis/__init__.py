@@ -1,0 +1,20 @@
+"""Static analysis for the repro tree: invariant linter + HLO
+communication-contract checker.
+
+Two passes, one CLI (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.invariants` — AST lint rules encoding the
+  invariants earned by PRs 1–5 (counter-based sweep RNG, compat-only
+  version-gated imports, choices-naming registry errors, no
+  nondeterminism in ``core/``).  See ``analysis/README.md`` for the
+  catalogue and suppression syntax.
+* :mod:`repro.analysis.contract` — :class:`CommContract` derived from
+  any ``ModelDef`` by :func:`contract_for` and verified against
+  StableHLO + compiled HLO, replacing the hand-copied collective
+  regexes that used to live in ``tests/test_distributed.py``.
+"""
+from .contract import (CommContract, ContractViolation,  # noqa: F401
+                       assert_contract, check_compiled, check_lowered,
+                       contract_for, dryrun_contract_findings)
+from .invariants import (RULES, Finding, LintRule,  # noqa: F401
+                         lint_paths, lint_source, resolve_rules)

@@ -1,0 +1,91 @@
+"""CLI for the static-analysis passes.
+
+Usage::
+
+    python -m repro.analysis                    # lint src/repro AND
+                                                # audit results/dryrun
+    python -m repro.analysis path1.py dir2/     # lint specific paths
+    python -m repro.analysis --rules batch-rng-in-sweep-path
+    python -m repro.analysis --contracts results/dryrun
+    python -m repro.analysis --list-rules
+
+Exit status is 0 when no findings, 1 otherwise — CI runs this on
+every push.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import invariants
+
+# repo root when run from a source checkout (…/src/repro/analysis)
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+_DEFAULT_DRYRUN = _REPO_ROOT / "results" / "dryrun"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Invariant linter + communication-contract "
+                    "checker for the repro tree.")
+    ap.add_argument(
+        "paths", nargs="*", type=Path,
+        help="files/directories to lint (default: the whole "
+             "repro package)")
+    ap.add_argument(
+        "--rules", default="all",
+        help="comma-separated rule ids, or 'all' (default)")
+    ap.add_argument(
+        "--contracts", metavar="DIR", type=Path, default=None,
+        help="audit dry-run JSONs in DIR against freshly derived "
+             "contracts (given alone, skips the lint pass); the "
+             "no-argument invocation audits results/dryrun if present")
+    ap.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in invariants.RULES.values():
+            print(f"{r.id}\n    {r.description}\n    why: {r.why}\n")
+        return 0
+
+    try:
+        rules = invariants.resolve_rules(args.rules)
+    except ValueError as e:
+        ap.error(str(e))
+
+    n = 0
+    run_lint = bool(args.paths) or args.contracts is None
+    if run_lint:
+        findings = invariants.lint_paths(args.paths or None, rules)
+        for f in findings:
+            print(f.format())
+        n += len(findings)
+
+    contracts_dir = args.contracts
+    if contracts_dir is None and not args.paths \
+            and _DEFAULT_DRYRUN.is_dir():
+        contracts_dir = _DEFAULT_DRYRUN
+    if contracts_dir is not None:
+        from .contract import dryrun_contract_findings
+        jsons = sorted(Path(contracts_dir).glob("*.json"))
+        if not jsons:
+            print(f"{contracts_dir}: no dry-run JSONs to audit",
+                  file=sys.stderr)
+        for j in jsons:
+            for msg in dryrun_contract_findings(j):
+                print(msg)
+                n += 1
+
+    print(f"repro.analysis: {n} finding(s)", file=sys.stderr)
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:     # e.g. `... --list-rules | head`
+        sys.exit(0)

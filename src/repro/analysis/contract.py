@@ -1,0 +1,298 @@
+"""Declarative communication contracts for the sharded Gibbs sweep.
+
+A :class:`CommContract` states, per compiled sweep step, exactly what
+may cross the interconnect — the limited-communication guarantee of
+the subset-parallel MCMC literature (arXiv:2004.02561) that PR 4's
+ring pipeline made exact:
+
+* ``all_gathers``       — full-factor gathers per sweep: one per
+                          entity in eager mode, **zero** in ring mode;
+* ``collective_permutes`` — ring hops: ``E * (S - 1)`` in ring mode;
+* ``all_reduces``       — hyper-moment + metric psums: per entity
+                          2 (Normal), 4 (Macau), 2 (SpikeAndSlab),
+                          0 (FixedNormal), plus 2 scalar psums per
+                          block (SSE, nnz);
+* ``max_reduce_elems``  — largest all-reduce payload in elements
+                          (K² Normal/Wishart moments, max(K², D·K)
+                          Macau, K SpikeAndSlab) — this is the pin
+                          that keeps e.g. the Macau FtF (D×D) product
+                          hoisted out of the psum;
+* ``wire_dtype``        — exchange dtype on gather/permute wires
+                          (``bf16`` when ``ModelDef.bf16_gather``).
+
+:func:`contract_for` *derives* the contract from any ``ModelDef`` —
+no per-model pins — and the two checkers verify it against StableHLO
+(exact op counts before backend scheduling) and compiled HLO (via
+:func:`repro.launch.hlo_cost.parse_module`, trip-count-aware so
+scan-rolled rings at 256 shards count correctly; all-reduce *counts*
+are not checked on compiled HLO because backends may legally combine
+payloads, but payload *sizes* are).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.distributed import RING_UNROLL_MAX, resolve_pipeline
+from ..core.priors import (FixedNormalPrior, MacauPrior, NormalPrior,
+                           SpikeAndSlabPrior)
+from ..launch.hlo_cost import COLLECTIVES, _called, _trip_count, \
+    op_kind, parse_module
+
+
+class ContractViolation(AssertionError):
+    """Raised by :func:`assert_contract` with one line per violation."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CommContract:
+    pipeline: str
+    n_shards: int
+    all_gathers: int            # full-factor gathers per sweep
+    collective_permutes: int    # ring hops per sweep
+    all_reduces: int            # hyper-moment + metric psums
+    max_reduce_elems: int       # largest all-reduce payload (elems)
+    wire_dtype: str             # "f32" | "bf16" on gather/permute
+
+    def asdict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def _prior_reduce_profile(prior) -> Tuple[int, int]:
+    """(all-reduce count, max payload elems) for one entity's hyper
+    moments, as emitted by ``distributed._psum_hyper``."""
+    K = getattr(prior, "num_latent", 0)
+    if isinstance(prior, MacauPrior):
+        D = prior.num_features
+        # sum_U (K), moment (K,K), side moment (D,K), side norm (D)
+        return 4, max(K * K, D * K, D, K)
+    if isinstance(prior, SpikeAndSlabPrior):
+        return 2, K                    # slab mass (K) + counts (K)
+    if isinstance(prior, FixedNormalPrior):
+        return 0, 0                    # no hypers to resample
+    if isinstance(prior, NormalPrior):
+        return 2, K * K                # sum_U (K) + moment (K,K)
+    raise ValueError(
+        f"no communication profile for prior {type(prior).__name__}; "
+        "supported priors: "
+        + ", ".join(sorted(c.__name__ for c in (
+            NormalPrior, MacauPrior, SpikeAndSlabPrior,
+            FixedNormalPrior))))
+
+
+def contract_for(model, mesh_shape: Sequence[int],
+                 pipeline: Optional[str] = "eager") -> CommContract:
+    """Derive the expected communication contract for one sweep of
+    ``model`` sharded over ``mesh_shape`` under ``pipeline``.
+
+    Pure arithmetic over the ModelDef — E entities, M blocks,
+    S = prod(mesh_shape) shards — so it needs no devices and works
+    for any model the builder can express.
+    """
+    pipeline = resolve_pipeline(pipeline)
+    n_shards = math.prod(mesh_shape)
+    E, M = len(model.entities), len(model.blocks)
+    ar, elems = 0, 0
+    for ent in model.entities:
+        n, e = _prior_reduce_profile(ent.prior)
+        ar += n
+        elems = max(elems, e)
+    ar += 2 * M                        # SSE + nnz scalars per block
+    elems = max(elems, 1) if ar else elems
+    if pipeline == "ring":
+        ag, cp = 0, E * (n_shards - 1)
+    else:
+        ag, cp = E, 0
+    return CommContract(
+        pipeline=pipeline, n_shards=n_shards, all_gathers=ag,
+        collective_permutes=cp, all_reduces=ar,
+        max_reduce_elems=elems,
+        wire_dtype="bf16" if model.bf16_gather else "f32")
+
+
+# ---------------------------------------------------------------------------
+# StableHLO check (pre-backend: exact op counts)
+# ---------------------------------------------------------------------------
+
+def check_lowered(contract: CommContract, text: str) -> List[str]:
+    """Verify a StableHLO module (``lowered.as_text()``) against the
+    contract.  Counts are exact here — nothing has been combined or
+    split yet.  Note: ring pipelines above ``RING_UNROLL_MAX`` shards
+    lower to ``stablehlo.while`` loops; use :func:`check_compiled`
+    (trip-count-aware) for those.
+    """
+    lines = text.splitlines()
+    ag = [ln for ln in lines if "stablehlo.all_gather" in ln]
+    cp = [ln for ln in lines if "stablehlo.collective_permute" in ln]
+    ar = sum(ln.count("stablehlo.all_reduce") for ln in lines)
+    rolled_ring = (contract.pipeline == "ring"
+                   and contract.n_shards > RING_UNROLL_MAX)
+    out: List[str] = []
+    if len(ag) != contract.all_gathers:
+        out.append(f"stablehlo: {len(ag)} all-gathers, contract says "
+                   f"{contract.all_gathers}")
+    if not rolled_ring and len(cp) != contract.collective_permutes:
+        out.append(f"stablehlo: {len(cp)} collective-permutes, "
+                   f"contract says {contract.collective_permutes}")
+    if ar != contract.all_reduces:
+        out.append(f"stablehlo: {ar} all-reduces, contract says "
+                   f"{contract.all_reduces}")
+    want_bf16 = contract.wire_dtype == "bf16"
+    for ln in ag + cp:
+        if ("bf16" in ln) != want_bf16:
+            out.append("stablehlo: exchange wire is not "
+                       f"{contract.wire_dtype}: {ln.strip()[:100]}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# compiled-HLO check (post-SPMD: trip-count-aware, parse_module-based)
+# ---------------------------------------------------------------------------
+
+def _collect_collectives(text: str):
+    """Trip-count-aware collective census over compiled HLO text:
+    ``({kind: count}, {kind: max payload elems})``.  Built on
+    ``hlo_cost.parse_module`` — async ``-start``/``-done`` pairs are
+    counted once, ``while`` bodies multiply by the recovered trip
+    count (how a scan-rolled ring at S=256 still counts E*(S-1))."""
+    comps = parse_module(text)
+    cache: Dict[str, Tuple[Dict[str, float], Dict[str, int]]] = {}
+
+    def merge(counts, elems, sub, mult=1):
+        sc, se = sub
+        for k, v in sc.items():
+            counts[k] = counts.get(k, 0) + mult * v
+        for k, v in se.items():
+            elems[k] = max(elems.get(k, 0), v)
+
+    def visit(name: str):
+        if name in cache:
+            return cache[name]
+        counts: Dict[str, float] = {}
+        elems: Dict[str, int] = {}
+        cache[name] = (counts, elems)   # guards (impossible) cycles
+        for ins in comps.get(name, []):
+            kind = op_kind(ins.op)
+            if kind in COLLECTIVES and not ins.op.endswith("-done"):
+                counts[kind] = counts.get(kind, 0) + 1
+                m = max((s.elems for s in ins.shapes), default=0)
+                elems[kind] = max(elems.get(kind, 0), m)
+            if ins.op == "while":
+                mt = re.search(
+                    r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"',
+                    ins.attrs)
+                trip = int(mt.group(1)) if mt else None
+                cond = _called(ins.attrs, "condition")
+                if trip is None and cond and cond in comps:
+                    trip = _trip_count(comps[cond])
+                trip = trip if trip else 1
+                for key in ("body", "condition"):
+                    callee = _called(ins.attrs, key)
+                    if callee:
+                        merge(counts, elems, visit(callee), trip)
+            elif ins.op == "fusion":
+                callee = _called(ins.attrs, "calls")
+                if callee:
+                    merge(counts, elems, visit(callee))
+            elif ins.op in ("call", "async-start"):
+                callee = _called(ins.attrs, "calls") or \
+                    _called(ins.attrs, "to_apply")
+                if callee:
+                    merge(counts, elems, visit(callee))
+            elif ins.op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    callee = _called(ins.attrs, key)
+                    if callee:
+                        merge(counts, elems, visit(callee))
+        return counts, elems
+
+    entry = "ENTRY" if "ENTRY" in comps else next(iter(comps), None)
+    if entry is None:
+        return {}, {}
+    return visit(entry)
+
+
+def check_compiled(contract: CommContract, text: str) -> List[str]:
+    """Verify compiled HLO (``compiled.as_text()``) against the
+    contract.  all-gather / collective-permute counts are exact (trip
+    multiplied); all-reduce payload sizes are bounded by
+    ``max_reduce_elems`` (counts may legally differ — backends
+    combine psums)."""
+    counts, elems = _collect_collectives(text)
+    out: List[str] = []
+    n_ag = int(counts.get("all-gather", 0))
+    n_cp = int(counts.get("collective-permute", 0))
+    if n_ag != contract.all_gathers:
+        out.append(f"compiled: {n_ag} all-gathers, contract says "
+                   f"{contract.all_gathers}")
+    if n_cp != contract.collective_permutes:
+        out.append(f"compiled: {n_cp} collective-permutes, contract "
+                   f"says {contract.collective_permutes}")
+    got = elems.get("all-reduce", 0)
+    if got > contract.max_reduce_elems:
+        out.append(f"compiled: all-reduce payload of {got} elems "
+                   f"exceeds contract max {contract.max_reduce_elems}"
+                   " (a full-matrix product leaked into a psum?)")
+    return out
+
+
+def assert_contract(contract: CommContract,
+                    lowered_text: Optional[str] = None,
+                    compiled_text: Optional[str] = None,
+                    where: str = "") -> None:
+    """Raise :class:`ContractViolation` listing every violation of
+    ``contract`` in the given StableHLO and/or compiled HLO text."""
+    out: List[str] = []
+    if lowered_text is not None:
+        out.extend(check_lowered(contract, lowered_text))
+    if compiled_text is not None:
+        out.extend(check_compiled(contract, compiled_text))
+    if out:
+        head = f"{where}: " if where else ""
+        raise ContractViolation(
+            head + f"{len(out)} contract violation(s) against "
+            f"{contract}\n  " + "\n  ".join(out))
+
+
+# ---------------------------------------------------------------------------
+# dry-run JSON audit (CI: results/dryrun/*.json carry their contract)
+# ---------------------------------------------------------------------------
+
+def dryrun_contract_findings(json_path) -> List[str]:
+    """Audit one dry-run record: its stored ``contract`` column must
+    match a freshly derived ``contract_for`` and its generation-time
+    HLO check must have passed.  Imports ``mf_dryrun`` lazily (the
+    module pins a 512-device host platform via XLA_FLAGS at import —
+    harmless here, no devices are materialized)."""
+    p = Path(json_path)
+    rec = json.loads(p.read_text())
+    if "error" in rec:
+        return [f"{p}: dry-run record is an error record"]
+    out: List[str] = []
+    if "contract" not in rec:
+        return [f"{p}: missing contract column — regenerate with "
+                "`python -m repro.launch.mf_dryrun`"]
+    from ..launch.mf_dryrun import CELLS, build_model
+    arch = rec.get("arch", "")
+    name = arch[3:] if arch.startswith("mf_") else arch
+    if name not in CELLS:
+        return [f"{p}: unknown cell {name!r}; valid cells: "
+                f"{', '.join(sorted(CELLS))}"]
+    model = build_model(CELLS[name], rec.get("variant", "baseline"))
+    mesh_shape = tuple(int(x) for x in rec["mesh"].split("x"))
+    derived = contract_for(model, mesh_shape,
+                           rec.get("pipeline", "eager")).asdict()
+    stored = rec["contract"]
+    for k, v in derived.items():
+        if stored.get(k) != v:
+            out.append(f"{p}: contract[{k!r}] = {stored.get(k)!r} "
+                       f"but derivation says {v!r}")
+    if not rec.get("contract_ok", False):
+        out.append(f"{p}: contract_ok is not true — the compiled "
+                   "HLO violated its contract at generation time: "
+                   f"{rec.get('contract_violations')}")
+    return out

@@ -1,0 +1,384 @@
+"""AST invariant linter for the repro tree.
+
+Every rule here encodes an invariant a previous PR *earned the hard
+way* — see ``analysis/README.md`` for the catalogue (which PR, why,
+and how to suppress).  The linter is purely static: it parses source
+with :mod:`ast`, never imports the module under inspection, and
+reports ``file:line``, a rule id, and a fix hint per finding.
+
+Suppression
+-----------
+Append ``# repro-lint: disable=<rule-id>[,<rule-id>...]`` (or
+``disable=all``) to the offending line, or put it on a comment-only
+line directly above.  Fixture files may carry a
+``# repro-lint: treat-as=<relpath>`` pragma in their first lines so
+path-scoped rules can be self-tested outside ``src/repro``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+# the repro package root (…/src/repro); default lint target
+REPRO_ROOT = Path(__file__).resolve().parents[1]
+
+_DISABLE_RE = re.compile(r"#\s*repro-lint:\s*disable=([\w,\-]+)")
+_TREAT_AS_RE = re.compile(r"#\s*repro-lint:\s*treat-as=(\S+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+    hint: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] "
+                f"{self.message}\n    fix: {self.hint}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintRule:
+    id: str
+    description: str
+    why: str                         # provenance: which PR earned it
+    check: Callable[["_Ctx"], Iterable[Finding]]
+
+
+RULES: Dict[str, LintRule] = {}
+
+
+def rule(rule_id: str, description: str, why: str):
+    """Register a lint rule (decorator over ``check(ctx)``)."""
+    def deco(fn):
+        if rule_id in RULES:
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        RULES[rule_id] = LintRule(rule_id, description, why, fn)
+        return fn
+    return deco
+
+
+def resolve_rules(spec: Optional[str] = "all") -> List[LintRule]:
+    """``'all'`` or a comma-separated id list -> rule objects."""
+    if spec in (None, "", "all"):
+        return list(RULES.values())
+    ids = [s.strip() for s in spec.split(",") if s.strip()]
+    unknown = [i for i in ids if i not in RULES]
+    if unknown:
+        raise ValueError(
+            f"unknown rule(s) {', '.join(unknown)}; "
+            f"valid rules: {', '.join(sorted(RULES))}")
+    return [RULES[i] for i in ids]
+
+
+class _Ctx:
+    """Everything a rule needs about one file, parsed once."""
+
+    def __init__(self, src: str, path: str, relpath: str):
+        self.src = src
+        self.path = path
+        self.relpath = relpath
+        self.tree = ast.parse(src)
+        self.lines = src.splitlines()
+        # nearest enclosing named function for every node
+        self._enclosing: Dict[int, Optional[str]] = {}
+        self._map_functions(self.tree, None)
+
+    def _map_functions(self, node: ast.AST, fname: Optional[str]):
+        self._enclosing[id(node)] = fname
+        inner = fname
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            inner = node.name
+        for child in ast.iter_child_nodes(node):
+            self._map_functions(child, inner)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[str]:
+        return self._enclosing.get(id(node))
+
+    def finding(self, node: ast.AST, rule_id: str, message: str,
+                hint: str) -> Finding:
+        return Finding(self.path, getattr(node, "lineno", 1),
+                       rule_id, message, hint)
+
+
+# ---------------------------------------------------------------------------
+# rule 1: counter-based RNG on the sweep path
+# ---------------------------------------------------------------------------
+
+_SWEEP_MODULES = {"core/gibbs.py", "core/priors.py", "core/noise.py"}
+# batch-shaped draw kinds that fork chains under sharding
+_BATCH_DRAWS = {"normal", "uniform", "bernoulli", "truncated_normal"}
+# init / replicated-hyper / documented single-device helpers
+_RNG_WHITELIST = {
+    "init_state",                 # pre-sweep init, replicated key
+    "row_normals", "row_uniforms",  # the counter-based primitives
+    "sample_mvn_from_precision",  # replicated hyper draw (K-sized)
+    "sample_wishart",             # replicated hyper draw (K×K)
+    "sample_hyper_moments",       # Macau beta draw, replicated
+    "_truncnorm",                 # documented single-device helper
+}
+_RANDOM_CALL_RE = re.compile(
+    r"(?:^|\.)random\.(normal|uniform|bernoulli|truncated_normal)$")
+
+
+@rule(
+    "batch-rng-in-sweep-path",
+    "batch-shaped jax.random draws in sweep-path modules must go "
+    "through the counter-based row_* primitives",
+    "PR 3: a batch-shaped jax.random.bernoulli in the spike-and-slab "
+    "update silently forked chains under sharding; shard draws are "
+    "bitwise slices of the single-device chain only when every "
+    "per-row draw folds the global row index into the key",
+)
+def _check_batch_rng(ctx: _Ctx) -> Iterable[Finding]:
+    if ctx.relpath not in _SWEEP_MODULES:
+        return
+    # names imported directly: from jax.random import normal [as n]
+    direct: Dict[str, str] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom) and \
+                node.module == "jax.random":
+            for a in node.names:
+                if a.name in _BATCH_DRAWS:
+                    direct[a.asname or a.name] = a.name
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func_src = ast.unparse(node.func)
+        m = _RANDOM_CALL_RE.search(func_src)
+        draw = m.group(1) if m else direct.get(func_src)
+        if draw is None:
+            continue
+        fname = ctx.enclosing_function(node)
+        if fname in _RNG_WHITELIST:
+            continue
+        where = f"in {fname}()" if fname else "at module level"
+        yield ctx.finding(
+            node, "batch-rng-in-sweep-path",
+            f"direct jax.random.{draw} draw {where} on the sweep path",
+            "use gibbs.row_normals/row_uniforms/row_bernoulli (they "
+            "fold the global row index into the key) or, for genuine "
+            "init/replicated-hyper code, add the function to the "
+            "whitelist in analysis/invariants.py")
+
+
+# ---------------------------------------------------------------------------
+# rule 2: version-sensitive imports live in compat.py
+# ---------------------------------------------------------------------------
+
+_IMPORT_EXEMPT_PREFIXES = ("kernels/",)
+_GATED_PREFIXES = ("jax.experimental", "jax._src")
+
+
+@rule(
+    "experimental-import-outside-compat",
+    "jax.experimental / jax._src imports are allowed only in "
+    "compat.py and the Pallas kernels",
+    "PR 2: shard_map moved between jax.experimental and jax core "
+    "across versions; every version-gated import is routed through "
+    "compat.py so exactly one module breaks on a JAX upgrade",
+)
+def _check_experimental_imports(ctx: _Ctx) -> Iterable[Finding]:
+    if ctx.relpath == "compat.py" or \
+            ctx.relpath.startswith(_IMPORT_EXEMPT_PREFIXES):
+        return
+    hint = ("import via repro.compat (add a shim there if one is "
+            "missing); only compat.py and kernels/ may touch "
+            "jax.experimental / jax._src")
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.startswith(_GATED_PREFIXES):
+                    yield ctx.finding(
+                        node, "experimental-import-outside-compat",
+                        f"direct import of {a.name}", hint)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module.startswith(_GATED_PREFIXES):
+                yield ctx.finding(
+                    node, "experimental-import-outside-compat",
+                    f"direct import from {node.module}", hint)
+            elif node.module == "jax":
+                for a in node.names:
+                    if a.name in ("experimental", "_src"):
+                        yield ctx.finding(
+                            node,
+                            "experimental-import-outside-compat",
+                            f"direct import of jax.{a.name}", hint)
+
+
+# ---------------------------------------------------------------------------
+# rule 3: registry errors name the valid choices
+# ---------------------------------------------------------------------------
+
+@rule(
+    "registry-error-without-choices",
+    "a `x not in registry` ValueError must name the valid choices",
+    "PR 5: session._prior_by_name / distributed.resolve_pipeline "
+    "established the tell-you-the-right-knobs contract — a typo'd "
+    "name fails fast listing what WOULD have worked, instead of "
+    "after a 256-chip lowering",
+)
+def _check_registry_errors(ctx: _Ctx) -> Iterable[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.If)
+                and isinstance(node.test, ast.Compare)
+                and len(node.test.ops) == 1
+                and isinstance(node.test.ops[0], ast.NotIn)):
+            continue
+        registry_src = ast.unparse(node.test.comparators[0])
+        # the choices may be formatted on a helper line feeding the
+        # message, so inspect the whole if-body, not just the raise
+        body_src = "\n".join(ast.unparse(s) for s in node.body)
+        if ".join(" in body_src or registry_src in body_src:
+            continue
+        for stmt in node.body:
+            for sub in ast.walk(stmt):
+                if not (isinstance(sub, ast.Raise) and sub.exc
+                        and isinstance(sub.exc, ast.Call)):
+                    continue
+                f = sub.exc.func
+                exc_name = f.id if isinstance(f, ast.Name) else (
+                    f.attr if isinstance(f, ast.Attribute) else "")
+                if exc_name != "ValueError":
+                    continue
+                yield ctx.finding(
+                    sub, "registry-error-without-choices",
+                    f"ValueError after `not in {registry_src}` does "
+                    "not name the valid choices",
+                    "include the registry keys in the message, e.g. "
+                    "f\"unknown x {name!r}; valid: "
+                    "{', '.join(sorted(" + registry_src + "))}\"")
+
+
+# ---------------------------------------------------------------------------
+# rule 4: no wall-clock / global-RNG nondeterminism in core/
+# ---------------------------------------------------------------------------
+
+_CLOCK_CALL_RE = re.compile(
+    r"(?:^|\.)time\.(?:time|time_ns|perf_counter|perf_counter_ns|"
+    r"monotonic|monotonic_ns)$"
+    r"|(?:^|\.)datetime\.(?:now|utcnow)$"
+    r"|(?:^|\.)date\.today$")
+_NP_RANDOM_RE = re.compile(r"(?:^|\.)(?:np|numpy)\.random\.(\w+)$")
+
+
+@rule(
+    "nondeterminism-in-core",
+    "core/ must not draw from global np.random state or read "
+    "wall-clock time",
+    "PR 1: bitwise reproducibility of the Gibbs chain is the repo's "
+    "north star; seeds flow through jax.random keys and explicit "
+    "default_rng(seed) only — clocks and process-global RNG state "
+    "make runs unrepeatable",
+)
+def _check_nondeterminism(ctx: _Ctx) -> Iterable[Finding]:
+    if not ctx.relpath.startswith("core/"):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func_src = ast.unparse(node.func)
+        m = _NP_RANDOM_RE.search(func_src)
+        if m:
+            attr = m.group(1)
+            if attr == "default_rng" and (node.args or node.keywords):
+                continue  # explicitly seeded generator is fine
+            what = ("unseeded np.random.default_rng()"
+                    if attr == "default_rng"
+                    else f"global-state np.random.{attr}(...)")
+            yield ctx.finding(
+                node, "nondeterminism-in-core", what,
+                "thread a seed explicitly: jax.random keys on device "
+                "paths, np.random.default_rng(seed) on host paths")
+        elif _CLOCK_CALL_RE.search(func_src):
+            yield ctx.finding(
+                node, "nondeterminism-in-core",
+                f"wall-clock read {func_src}(...)",
+                "core/ results must be a pure function of (model, "
+                "data, seed); move timing to launch/ or tests")
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def repo_relpath(path: Path) -> str:
+    """Path of a file relative to the repro package (posix), or its
+    basename when outside the package (fixtures use ``treat-as``)."""
+    try:
+        return path.resolve().relative_to(REPRO_ROOT).as_posix()
+    except ValueError:
+        return path.name
+
+
+def _suppressions(lines: Sequence[str]) -> Dict[int, set]:
+    out: Dict[int, set] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _DISABLE_RE.search(line)
+        if m:
+            out[i] = {s.strip() for s in m.group(1).split(",")}
+    return out
+
+
+def _suppressed(finding: Finding, lines: Sequence[str],
+                supp: Dict[int, set]) -> bool:
+    def hit(ids):
+        return ids is not None and \
+            ("all" in ids or finding.rule in ids)
+    if hit(supp.get(finding.line)):
+        return True
+    prev = finding.line - 1
+    if prev >= 1 and prev <= len(lines) and \
+            lines[prev - 1].lstrip().startswith("#"):
+        return hit(supp.get(prev))
+    return False
+
+
+def lint_source(src: str, path: str = "<string>",
+                rules: Optional[Sequence[LintRule]] = None
+                ) -> List[Finding]:
+    """Lint one source string; ``path`` is used for reporting and —
+    unless a ``treat-as`` pragma overrides it — rule scoping."""
+    relpath = repo_relpath(Path(path))
+    for line in src.splitlines()[:10]:
+        m = _TREAT_AS_RE.search(line)
+        if m:
+            relpath = m.group(1)
+            break
+    ctx = _Ctx(src, path, relpath)
+    supp = _suppressions(ctx.lines)
+    findings: List[Finding] = []
+    for r in (rules if rules is not None else RULES.values()):
+        findings.extend(f for f in r.check(ctx)
+                        if not _suppressed(f, ctx.lines, supp))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def iter_py_files(paths: Sequence[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(sorted(
+                f for f in p.rglob("*.py")
+                if "__pycache__" not in f.parts))
+        else:
+            out.append(p)
+    return out
+
+
+def lint_paths(paths: Optional[Sequence[Path]] = None,
+               rules: Optional[Sequence[LintRule]] = None
+               ) -> List[Finding]:
+    """Lint files/directories (default: the whole repro package)."""
+    files = iter_py_files([REPRO_ROOT] if paths is None else paths)
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(lint_source(
+            f.read_text(), path=str(f), rules=rules))
+    return findings

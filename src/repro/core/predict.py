@@ -301,9 +301,14 @@ class PredictSession:
         else:
             bi, _ = self._resolve_block(block)
             if bi not in [b for b, _ in touching]:
+                names = model.entity_names
+                opts = ", ".join(
+                    f"({names[model.blocks[b].row_entity]}, "
+                    f"{names[model.blocks[b].col_entity]})"
+                    for b, _ in touching)
                 raise ValueError(
                     f"block {block!r} does not touch entity "
-                    f"{ent.name!r}")
+                    f"{ent.name!r}; touching blocks: {opts}")
         other = model.blocks[bi].other(e)
         F_new = np.atleast_2d(np.asarray(F_new, np.float32))
         if F_new.shape[1] != ent.prior.num_features:

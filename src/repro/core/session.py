@@ -452,6 +452,8 @@ class Session:
                                         self.pipeline)
         accs = {bi: PredictAccumulator(ts)
                 for bi, ts in self.tests.items()}
+        # wall-clock only reports runtime; samples are unaffected
+        # repro-lint: disable=nondeterminism-in-core
         t0 = time.perf_counter()
         n_blocks = len(model.blocks)
         train_traces: List[List[float]] = [[] for _ in range(n_blocks)]
@@ -501,6 +503,7 @@ class Session:
         if saver is not None:
             saver.wait()
 
+        # repro-lint: disable=nondeterminism-in-core
         runtime = time.perf_counter() - t0
         names = model.entity_names
         block_results: List[BlockResult] = []

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 from .. import compat
@@ -49,7 +50,24 @@ _DTYPE_BYTES = {
 }
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
-               "all-to-all", "collective-permute")
+               "ragged-all-to-all", "all-to-all", "collective-permute",
+               "collective-broadcast")
+
+
+def op_kind(op: str) -> str:
+    """Normalize an HLO opcode to its collective kind.
+
+    Async collectives lower to ``<kind>-start`` / ``<kind>-done``
+    pairs; both map onto the base kind so callers can classify an op
+    exactly once instead of re-deriving the suffix logic (the source
+    of the double-count this module used to have).  Non-collective
+    ops are returned unchanged.
+    """
+    for kind in COLLECTIVES:
+        if op == kind or (op.startswith(kind)
+                          and op[len(kind):] in ("-start", "-done")):
+            return kind
+    return op
 
 # one scalar/array shape like  bf16[8,128]{1,0:T(8,128)}  or  f32[]
 _SHAPE_RE = re.compile(
@@ -70,7 +88,20 @@ class Shape:
 
     @property
     def bytes(self) -> int:
-        return self.elems * _DTYPE_BYTES.get(self.dtype, 0)
+        bs = _DTYPE_BYTES.get(self.dtype)
+        if bs is None:
+            if self.dtype not in _WARNED_DTYPES:
+                _WARNED_DTYPES.add(self.dtype)
+                warnings.warn(
+                    f"hlo_cost: unknown HLO dtype {self.dtype!r}; "
+                    "treating as 0 bytes — add it to _DTYPE_BYTES "
+                    "so roofline terms stay exact", stacklevel=2)
+            return 0
+        return self.elems * bs
+
+
+# dtypes already warned about (once per process, not once per shape)
+_WARNED_DTYPES: set = set()
 
 
 @dataclasses.dataclass
@@ -272,31 +303,42 @@ class HloCost:
         instrs = self.comps.get(comp, [])
         table = {i.name: i for i in instrs}
         for ins in instrs:
+            kind = op_kind(ins.op)
+            is_coll = kind in COLLECTIVES
+            is_done = is_coll and ins.op.endswith("-done")
             if ins.op == "dot":
                 total.flops += self._dot_flops(ins, table)
             elif ins.op == "convolution":
                 total.flops += self._conv_flops(ins, table)
-            elif ins.op in COLLECTIVES or \
-                    any(ins.op == c + "-start" for c in COLLECTIVES):
-                kind = ins.op.replace("-start", "")
+            elif is_coll and not is_done:
+                # An async pair (-start/-done) is ONE transfer: all
+                # accounting happens on the -start op (its tuple result
+                # aliases operand+result, so subtract operand bytes to
+                # recover the result payload); -done is pure bookkeeping
+                # and contributes nothing.
+                result_b = ins.bytes
+                if ins.op.endswith("-start") and len(ins.shapes) > 1:
+                    result_b = max(0, ins.bytes - sum(
+                        table[o].bytes for o in ins.operands
+                        if o in table))
                 # per-chip ICI wire bytes (ring algorithms, (N-1)/N ~ 1):
                 #   all-gather        ~ result bytes (receives the world)
                 #   all-reduce        ~ 2x payload (reduce + broadcast)
                 #   reduce-scatter    ~ operand bytes
-                #   all-to-all / cp   ~ operand bytes
+                #   all-to-all / cp / broadcast ~ operand bytes
                 opb = sum(table[o].bytes for o in ins.operands
                           if o in table)
                 if opb == 0:
-                    opb = ins.bytes
+                    opb = result_b
                 if kind == "all-gather":
-                    b = max(ins.bytes, opb)
+                    b = max(result_b, opb)
                 elif kind == "all-reduce":
                     b = 2 * opb
                 else:
                     b = opb
                 total.coll[kind] += b
                 if not in_fusion:
-                    total.bytes += ins.bytes
+                    total.bytes += result_b
 
             if ins.op == "while":
                 body = _called(ins.attrs, "body")
@@ -329,8 +371,10 @@ class HloCost:
                         total.add(self.cost_of(callee, in_fusion))
 
             # HBM traffic: top-level (non-fusion-body) instructions
+            # (collectives — sync, -start AND -done — are fully
+            # accounted in the collective branch above)
             if not in_fusion and ins.op not in _SKIP_BYTES \
-                    and ins.op not in COLLECTIVES:
+                    and not is_coll:
                 b = ins.bytes
                 for o in ins.operands:
                     if o in table and table[o].op not in (
@@ -339,7 +383,7 @@ class HloCost:
                 total.bytes += b
             # TPU-fusion model: materialization points only, counted
             # whether or not CPU-XLA happened to fuse them
-            if ins.op in _MATERIALIZE and ins.op not in COLLECTIVES:
+            if ins.op in _MATERIALIZE and not is_coll:
                 if ins.op in ("dynamic-slice", "gather"):
                     # reads only the sliced/gathered elements
                     b = 2 * ins.bytes
@@ -359,9 +403,13 @@ class HloCost:
                                 "tuple", "constant"):
                             b += table[o].bytes
                 total.bytes_tpu += b
-            elif ins.op in COLLECTIVES or any(
-                    ins.op == c + "-start" for c in COLLECTIVES):
-                total.bytes_tpu += ins.bytes
+            elif is_coll and not is_done:
+                b = ins.bytes
+                if ins.op.endswith("-start") and len(ins.shapes) > 1:
+                    b = max(0, ins.bytes - sum(
+                        table[o].bytes for o in ins.operands
+                        if o in table))
+                total.bytes_tpu += b
         return total
 
     def entry_cost(self) -> Cost:

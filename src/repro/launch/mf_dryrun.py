@@ -231,6 +231,7 @@ def mf_model_flops(cell: MFCell, n_chips: int) -> float:
 
 
 def lower_cell(cell: MFCell, mesh, variant: str):
+    from ..analysis.contract import check_compiled, contract_for
     from ..core.distributed import (distributed_supported,
                                     make_distributed_step)
     from ..core.gibbs import init_state
@@ -256,7 +257,13 @@ def lower_cell(cell: MFCell, mesh, variant: str):
     t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    hc = hlo_analyze(compiled.as_text())
+    ctxt = compiled.as_text()
+    hc = hlo_analyze(ctxt)
+    # the derived communication contract, verified against the very
+    # HLO whose roofline we are recording (trip-count-aware, so the
+    # scan-rolled ring at 256 shards counts its E*(S-1) hops)
+    contract = contract_for(model, tuple(mesh.devices.shape), pipeline)
+    violations = check_compiled(contract, ctxt)
     n_chips = mesh.devices.size
     bytes_hbm = (hc["bytes_materialized"]
                  + int(mem.argument_size_in_bytes)
@@ -297,7 +304,11 @@ def lower_cell(cell: MFCell, mesh, variant: str):
         "model_flops": mf,
         "useful_flop_ratio": mf / hc["flops"] if hc["flops"] else 0.0,
         "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "contract": contract.asdict(),
+        "contract_ok": not violations,
     }
+    if violations:
+        rec["contract_violations"] = violations
     return rec
 
 
@@ -344,7 +355,10 @@ def main() -> None:
                 fail += 1
                 print(f"{c:16s} {mk:6s} FAIL {rec['error'][:100]}")
             else:
-                print(f"{c:16s} {mk:6s} ok comp {rec['compute_s']:.2e} "
+                if not rec["contract_ok"]:
+                    fail += 1
+                ct = "ok" if rec["contract_ok"] else "CONTRACT-VIOLATED"
+                print(f"{c:16s} {mk:6s} {ct} comp {rec['compute_s']:.2e} "
                       f"mem {rec['memory_s']:.2e} "
                       f"coll {rec['collective_s']:.2e} "
                       f"xchg {rec['exchange_s_modeled']:.2e} "

@@ -1,0 +1,6 @@
+"""Seeded violations: version-gated imports outside compat.py."""
+from jax.experimental import pallas  # expect: experimental-import-outside-compat
+from jax.experimental.shard_map import shard_map  # expect: experimental-import-outside-compat
+import jax._src.mesh  # expect: experimental-import-outside-compat
+
+__all__ = ["pallas", "shard_map", "jax"]

@@ -1,0 +1,14 @@
+# repro-lint: treat-as=core/sampler_utils.py
+"""Seeded violations: wall-clock / global-RNG nondeterminism in
+core/; the explicitly seeded generator must NOT be flagged."""
+import time
+
+import numpy as np
+
+
+def jitter():
+    t = time.time()  # expect: nondeterminism-in-core
+    r = np.random.rand(4)  # expect: nondeterminism-in-core
+    g = np.random.default_rng()  # expect: nondeterminism-in-core
+    ok = np.random.default_rng(0)
+    return t, r, g, ok

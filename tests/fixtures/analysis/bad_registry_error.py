@@ -1,0 +1,25 @@
+"""Seeded violation: registry lookup error hiding the choices."""
+_SAMPLERS = {"gibbs": object, "sgld": object}
+
+
+def resolve(name):
+    if name not in _SAMPLERS:
+        raise ValueError(f"unknown sampler {name!r}")  # expect: registry-error-without-choices
+    return _SAMPLERS[name]
+
+
+def resolve_ok(name):
+    """Names the choices -> must not be flagged."""
+    if name not in _SAMPLERS:
+        raise ValueError(
+            f"unknown sampler {name!r}; valid samplers: "
+            f"{', '.join(sorted(_SAMPLERS))}")
+    return _SAMPLERS[name]
+
+
+def resolve_ok_helper_line(name):
+    """Choices formatted on a helper line -> must not be flagged."""
+    if name not in _SAMPLERS:
+        known = ", ".join(sorted(_SAMPLERS))
+        raise ValueError(f"unknown sampler {name!r}; try: {known}")
+    return _SAMPLERS[name]

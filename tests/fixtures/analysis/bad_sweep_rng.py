@@ -1,0 +1,20 @@
+# repro-lint: treat-as=core/gibbs.py
+"""Seeded violations: batch-shaped draws on the sweep path.
+
+Each flagged line carries an expect-marker comment read by
+tests/test_analysis.py; the whitelisted function below it must NOT
+be flagged.
+"""
+import jax
+
+
+def sample_block(key, n_rows, num_latent):
+    eps = jax.random.normal(key, (n_rows, num_latent))  # expect: batch-rng-in-sweep-path
+    u = jax.random.uniform(key, (n_rows,))  # expect: batch-rng-in-sweep-path
+    s = jax.random.bernoulli(key, 0.5, (n_rows,))  # expect: batch-rng-in-sweep-path
+    return eps, u, s
+
+
+def init_state(key, n_rows):
+    # whitelisted: pre-sweep init runs once with a replicated key
+    return jax.random.normal(key, (n_rows, 4))

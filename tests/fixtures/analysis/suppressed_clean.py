@@ -1,0 +1,16 @@
+# repro-lint: treat-as=core/gibbs.py
+"""Suppression comments silence findings line by line — this file
+must produce ZERO findings despite containing rule violations."""
+import time
+
+import jax
+
+
+def legacy_draw(key, n):
+    return jax.random.normal(key, (n, 4))  # repro-lint: disable=batch-rng-in-sweep-path
+
+
+def timed_draw(key, n):
+    # repro-lint: disable=all
+    t0 = time.time()
+    return t0, legacy_draw(key, n)

@@ -1,0 +1,314 @@
+"""Self-tests for the static-analysis subsystem (repro.analysis).
+
+The linter is validated two ways: fixture modules under
+tests/fixtures/analysis/ carry seeded violations marked with
+``# expect: <rule-id>`` comments (every marked line must be found, at
+the right line, and nothing else), and the real tree must come back
+clean — the linter IS the regression test for the invariants PRs 1–5
+earned.
+
+The contract engine is validated arithmetically here (the derivation
+for every model-zoo family on both mesh layouts and both pipelines)
+and against synthetic HLO with seeded violations; the end-to-end
+checks against real lowerings live in tests/test_distributed.py and
+the dry-run CLI.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (CommContract, ContractViolation, Finding,
+                            assert_contract, check_compiled,
+                            check_lowered, contract_for, lint_paths,
+                            resolve_rules)
+from repro.analysis.invariants import REPRO_ROOT
+from repro.core.blocks import BlockDef, EntityDef, ModelDef
+from repro.core.noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
+from repro.core.priors import (FixedNormalPrior, MacauPrior, NormalPrior,
+                               SpikeAndSlabPrior)
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+BAD_FIXTURES = sorted(p.name for p in FIXTURES.glob("bad_*.py"))
+
+
+def _expected(path: Path):
+    """{(line, rule-id)} read from the fixture's # expect: markers."""
+    out = set()
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        if "# expect: " in line:
+            out.add((i, line.split("# expect: ", 1)[1].strip()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# linter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", BAD_FIXTURES)
+def test_fixture_violations_detected_at_marked_lines(name):
+    path = FIXTURES / name
+    expected = _expected(path)
+    assert expected, f"{name} has no # expect: markers"
+    found = {(f.line, f.rule) for f in lint_paths([path])}
+    assert found == expected, (name, found, expected)
+
+
+def test_suppression_comments_silence_findings():
+    findings = lint_paths([FIXTURES / "suppressed_clean.py"])
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_clean_tree_zero_findings():
+    findings = lint_paths()          # defaults to all of src/repro
+    assert findings == [], "\n".join(f.format() for f in findings)
+    # and the default target really is the package under test
+    assert (REPRO_ROOT / "core" / "gibbs.py").exists()
+
+
+def test_findings_report_file_line_rule_and_hint():
+    f = lint_paths([FIXTURES / "bad_registry_error.py"])[0]
+    assert isinstance(f, Finding)
+    txt = f.format()
+    assert f"bad_registry_error.py:{f.line}:" in txt
+    assert "[registry-error-without-choices]" in txt
+    assert "fix:" in txt
+
+
+def test_resolve_rules_names_choices_on_typo():
+    assert [r.id for r in resolve_rules("nondeterminism-in-core")] == \
+        ["nondeterminism-in-core"]
+    with pytest.raises(ValueError, match="valid rules.*batch-rng"):
+        resolve_rules("no-such-rule")
+
+
+def test_rule_selection_scopes_the_pass():
+    path = FIXTURES / "bad_sweep_rng.py"
+    only_imports = lint_paths(
+        [path], resolve_rules("experimental-import-outside-compat"))
+    assert only_imports == []
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args, timeout=240):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        env=env, capture_output=True, text=True, timeout=timeout,
+        cwd=REPO_ROOT)
+
+
+@pytest.mark.slow
+def test_cli_exits_zero_on_repo_tree():
+    out = _run_cli()
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "0 finding(s)" in out.stderr
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", BAD_FIXTURES)
+def test_cli_exits_nonzero_on_each_seeded_fixture(name):
+    out = _run_cli(str(FIXTURES / name))
+    assert out.returncode == 1, out.stdout + out.stderr
+    for line, rule_id in _expected(FIXTURES / name):
+        assert f"{name}:{line}: [{rule_id}]" in out.stdout, \
+            (name, line, rule_id, out.stdout)
+
+
+# ---------------------------------------------------------------------------
+# contract derivation (pure arithmetic; real-lowering checks live in
+# test_distributed.py and the dry-run CLI)
+# ---------------------------------------------------------------------------
+
+K = 8
+
+
+def _two_entity(noise=None, row_prior=None, bf16=False):
+    return ModelDef(
+        (EntityDef("r", 96, row_prior or NormalPrior(K)),
+         EntityDef("c", 48, NormalPrior(K))),
+        (BlockDef(0, 1, noise or FixedGaussian(5.0), sparse=True),),
+        K, use_pallas=False, bf16_gather=bf16)
+
+
+def _gfa_model():
+    ents = [EntityDef("z", 96, FixedNormalPrior(K)),
+            EntityDef("v0", 48, SpikeAndSlabPrior(K)),
+            EntityDef("v1", 24, SpikeAndSlabPrior(K))]
+    blocks = (BlockDef(0, 1, AdaptiveGaussian(), sparse=False),
+              BlockDef(0, 2, AdaptiveGaussian(), sparse=False))
+    return ModelDef(tuple(ents), blocks, K)
+
+
+ZOO = {
+    "gaussian": (_two_entity(), 2, 6, K * K, "f32"),
+    "probit": (_two_entity(noise=ProbitNoise()), 2, 6, K * K, "f32"),
+    "bf16": (_two_entity(bf16=True), 2, 6, K * K, "bf16"),
+    "macau": (_two_entity(row_prior=MacauPrior(K, 12)), 2, 8,
+              12 * K, "f32"),
+    "gfa": (_gfa_model(), 3, 8, K, "f32"),
+}
+
+
+@pytest.mark.parametrize("mesh_shape", [(8,), (4, 2)])
+@pytest.mark.parametrize("name", sorted(ZOO))
+@pytest.mark.parametrize("pipeline", ["eager", "ring"])
+def test_contract_for_model_zoo(name, mesh_shape, pipeline):
+    model, E, ar, max_elems, wire = ZOO[name]
+    c = contract_for(model, mesh_shape, pipeline)
+    S = 8
+    assert c.n_shards == S
+    assert c.all_reduces == ar
+    assert c.max_reduce_elems == max_elems
+    assert c.wire_dtype == wire
+    if pipeline == "ring":
+        # zero full-factor gathers in ring mode — the limited-
+        # communication guarantee — and E circulations of S-1 hops
+        assert c.all_gathers == 0
+        assert c.collective_permutes == E * (S - 1)
+    else:
+        assert c.all_gathers == E
+        assert c.collective_permutes == 0
+
+
+def test_contract_for_validates_pipeline_choices():
+    with pytest.raises(ValueError, match="valid pipelines"):
+        contract_for(_two_entity(), (8,), "warp")
+
+
+def test_contract_for_rejects_unknown_prior():
+    class MysteryPrior:
+        num_latent = K
+
+    model = ModelDef((EntityDef("r", 96, MysteryPrior()),),
+                     (), K)
+    with pytest.raises(ValueError, match="NormalPrior"):
+        contract_for(model, (8,), "eager")
+
+
+# ---------------------------------------------------------------------------
+# contract checking against synthetic IR with seeded violations
+# ---------------------------------------------------------------------------
+
+_FAKE_STABLEHLO = """
+module @jit_step {
+  func.func public @main(%arg0: tensor<12x8xf32>) {
+    %0 = "stablehlo.all_gather"(%arg0) : (tensor<12x8xf32>) -> tensor<96x8xf32>
+    %1 = "stablehlo.all_gather"(%arg0) : (tensor<12x8xf32>) -> tensor<96x8xf32>
+    %2 = "stablehlo.all_reduce"(%arg0) : (tensor<8x8xf32>) -> tensor<8x8xf32>
+    %3 = "stablehlo.all_reduce"(%arg0) : (tensor<8x8xf32>) -> tensor<8x8xf32>
+    %4 = "stablehlo.all_reduce"(%arg0) : (tensor<f32>) -> tensor<f32>
+    %5 = "stablehlo.all_reduce"(%arg0) : (tensor<f32>) -> tensor<f32>
+    %6 = "stablehlo.all_reduce"(%arg0) : (tensor<f32>) -> tensor<f32>
+    %7 = "stablehlo.all_reduce"(%arg0) : (tensor<f32>) -> tensor<f32>
+  }
+}
+"""
+
+_FAKE_HLO = """
+HloModule jit_step
+
+ENTRY %main (p0: f32[12,8]) -> f32[96,8] {
+  %p0 = f32[12,8]{1,0} parameter(0)
+  %ag0 = f32[96,8]{1,0} all-gather(f32[12,8]{1,0} %p0), dimensions={0}
+  %ag1 = f32[96,8]{1,0} all-gather(f32[12,8]{1,0} %p0), dimensions={0}
+  %ar0 = f32[8,8]{1,0} all-reduce(f32[8,8]{1,0} %p0), to_apply=%add
+  ROOT %out = f32[96,8]{1,0} add(f32[96,8]{1,0} %ag0, f32[96,8]{1,0} %ag1)
+}
+"""
+
+
+def _eager_contract(ar=6):
+    return CommContract(pipeline="eager", n_shards=8, all_gathers=2,
+                        collective_permutes=0, all_reduces=ar,
+                        max_reduce_elems=K * K, wire_dtype="f32")
+
+
+def test_check_lowered_passes_matching_module():
+    assert check_lowered(_eager_contract(), _FAKE_STABLEHLO) == []
+
+
+def test_check_lowered_catches_count_and_dtype_violations():
+    # one gather too many expected -> count violation
+    bad = _eager_contract()
+    bad = CommContract(**{**bad.asdict(), "all_gathers": 3})
+    msgs = check_lowered(bad, _FAKE_STABLEHLO)
+    assert any("all-gather" in m for m in msgs), msgs
+    # bf16 contract against an f32 wire -> dtype violation
+    bad = CommContract(**{**_eager_contract().asdict(),
+                          "wire_dtype": "bf16"})
+    msgs = check_lowered(bad, _FAKE_STABLEHLO)
+    assert any("wire" in m for m in msgs), msgs
+
+
+def test_check_compiled_counts_and_payload_bound():
+    assert check_compiled(_eager_contract(), _FAKE_HLO) == []
+    # a ring contract must reject the gathers outright
+    ring = CommContract(pipeline="ring", n_shards=8, all_gathers=0,
+                        collective_permutes=14, all_reduces=6,
+                        max_reduce_elems=K * K, wire_dtype="f32")
+    msgs = check_compiled(ring, _FAKE_HLO)
+    assert any("all-gather" in m for m in msgs), msgs
+    assert any("collective-permute" in m for m in msgs), msgs
+    # payload bound: an all-reduce bigger than max_reduce_elems fails
+    tight = CommContract(**{**_eager_contract().asdict(),
+                            "max_reduce_elems": 4})
+    msgs = check_compiled(tight, _FAKE_HLO)
+    assert any("payload" in m for m in msgs), msgs
+
+
+def test_assert_contract_raises_with_every_violation():
+    ring = CommContract(pipeline="ring", n_shards=8, all_gathers=0,
+                        collective_permutes=14, all_reduces=6,
+                        max_reduce_elems=K * K, wire_dtype="f32")
+    with pytest.raises(ContractViolation, match="all-gather"):
+        assert_contract(ring, lowered_text=_FAKE_STABLEHLO,
+                        compiled_text=_FAKE_HLO, where="synthetic")
+    # the passing direction raises nothing
+    assert_contract(_eager_contract(), lowered_text=_FAKE_STABLEHLO,
+                    compiled_text=_FAKE_HLO)
+
+
+# ---------------------------------------------------------------------------
+# dry-run JSON audit
+# ---------------------------------------------------------------------------
+
+DRYRUN = REPO_ROOT / "results" / "dryrun"
+
+
+@pytest.mark.slow
+def test_committed_dryrun_jsons_carry_valid_contracts():
+    """Every committed dry-run record stores the contract its HLO was
+    verified against, and re-deriving it from the cell reproduces it
+    (audited in-process; CI also runs the CLI equivalent)."""
+    from repro.analysis.contract import dryrun_contract_findings
+    jsons = sorted(DRYRUN.glob("*.json"))
+    assert jsons, "no committed dry-run JSONs"
+    for j in jsons:
+        assert dryrun_contract_findings(j) == [], j.name
+        rec = json.loads(j.read_text())
+        assert rec["contract_ok"] is True, j.name
+
+
+@pytest.mark.slow
+def test_cli_contract_audit_catches_tampered_json(tmp_path):
+    """--contracts on a doctored record (ring claiming all-gathers)
+    exits nonzero naming the mismatched field."""
+    src = sorted(DRYRUN.glob("*.ring.json"))
+    assert src, "no committed ring dry-run JSON"
+    rec = json.loads(src[0].read_text())
+    rec["contract"]["all_gathers"] = 2          # rings gather nothing
+    (tmp_path / src[0].name).write_text(json.dumps(rec))
+    out = _run_cli("--contracts", str(tmp_path))
+    assert out.returncode == 1, out.stdout + out.stderr
+    assert "all_gathers" in out.stdout

@@ -32,6 +32,11 @@ too, plus ZERO per-sweep Macau ``FtF`` psums (the (D, D) side-Gramian
 is hoisted to placement time) and ZERO per-component SnS collectives
 (two K-sized hyper psums per view are the entire SnS budget).
 
+All HLO pins are expressed through ``repro.analysis.contract``: each
+script derives a ``CommContract`` with ``contract_for(model,
+mesh_shape, pipeline)`` and verifies StableHLO + compiled HLO with
+``assert_contract`` — no per-script collective regexes.
+
 Runs in subprocesses because the device count must be set before jax
 initializes (the main pytest process keeps the default 1 CPU device).
 """
@@ -295,11 +300,12 @@ _SNS_PARITY_SCRIPT = textwrap.dedent("""
 """)
 
 _HLO_SNS_SCRIPT = textwrap.dedent("""
-    import os, re
+    import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     import jax
 
+    from repro.analysis.contract import assert_contract, contract_for
     from repro.core import (AdaptiveGaussian, MFData, dense_block,
                             init_state)
     from repro.core.blocks import BlockDef, EntityDef, ModelDef
@@ -329,33 +335,23 @@ _HLO_SNS_SCRIPT = textwrap.dedent("""
     step, ds, ss = make_distributed_step(model, mesh, data, state,
                                          pipeline="eager")
     lowered = step.lower(data, state)
-    txt = lowered.as_text()
 
-    # ONE fixed-factor all-gather per half-sweep: each entity's factor
-    # is gathered exactly once per sweep (E entities -> E gathers)
-    sh = [l for l in txt.splitlines() if "stablehlo.all_gather" in l]
-    assert len(sh) == len(model.entities), sh
-
-    # hyper/noise psums only: 2 K-sized SnS moments per view + 2
-    # scalar SSE/nnz per block.  The coordinate loop runs K unrolled
-    # iterations — a single per-component psum would add ~K more.
+    # the derived contract IS the old hand-pins: one fixed-factor
+    # all-gather per half-sweep (E entities -> E gathers); hyper/noise
+    # psums only — 2 K-sized SnS moments per view + 2 scalar SSE/nnz
+    # per block, so 4 per view and ZERO per-component collectives
+    # (the K-unrolled coordinate loop would add ~K more each); and
+    # every backend all-reduce payload at most K-sized (the gathered
+    # factors are consumed, not reduced)
     M = len(dims)
-    n_ar = txt.count("stablehlo.all_reduce")
-    assert n_ar == 4 * M, (n_ar, M)
-
-    # and every collective payload on the backend is at most K-sized
-    # (the all-gathered factors are consumed, not reduced)
-    ctxt = lowered.compile().as_text()
-    for line in ctxt.splitlines():
-        if "all-reduce(" not in line and "all-reduce-start(" not in line:
-            continue
-        for shp in re.findall(r"f32\\[([\\d,]*)\\]", line):
-            n_el = int(np.prod([int(d) for d in shp.split(",") if d]
-                               or [1]))
-            assert n_el <= K * K, (n_el, line)
-    ags = re.findall(r"all-gather(?:-start)?\\(", ctxt)
-    assert len(ags) == len(model.entities), len(ags)
-    print("all-gathers", len(ags), "all-reduces", n_ar)
+    c = contract_for(model, (8,), "eager")
+    assert c.all_gathers == len(model.entities), c
+    assert c.all_reduces == 4 * M, c
+    assert c.max_reduce_elems == K, c
+    assert_contract(c, lowered_text=lowered.as_text(),
+                    compiled_text=lowered.compile().as_text(),
+                    where="gfa/eager")
+    print("all-gathers", c.all_gathers, "all-reduces", c.all_reduces)
     print("OK")
 """)
 
@@ -491,12 +487,13 @@ _RING_PARITY_SCRIPT = textwrap.dedent("""
 """)
 
 _RING_HLO_SCRIPT = textwrap.dedent("""
-    import os, re
+    import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     import jax
     import jax.numpy as jnp
 
+    from repro.analysis.contract import assert_contract, contract_for
     from repro.core import (AdaptiveGaussian, FixedGaussian, MFData,
                             ProbitNoise, dense_block, init_state)
     from repro.core.blocks import BlockDef, EntityDef, ModelDef
@@ -570,40 +567,35 @@ _RING_HLO_SCRIPT = textwrap.dedent("""
             step, ds, ss = make_distributed_step(model, mesh, data,
                                                  state, pipeline="ring")
             lowered = step.lower(data, state)
-            txt = lowered.as_text()
             E = len(model.entities)
 
-            # the ring communication contract, pre-backend: ZERO
-            # full-factor all-gathers anywhere in the program, and
+            # the ring communication contract, derived not hand-pinned:
+            # ZERO full-factor all-gathers anywhere in the program and
             # exactly n_shards - 1 collective-permutes per half-sweep
             # (one circulation per entity per sweep — the metrics
             # reuse the final half-sweep's reassembled view, exactly
-            # like eager reuses its gather)
-            assert "stablehlo.all_gather" not in txt, (name, mesh_shape)
-            cps = [l for l in txt.splitlines()
-                   if "stablehlo.collective_permute" in l]
-            assert len(cps) == E * (S - 1), (name, mesh_shape, len(cps))
-            if model.bf16_gather:
-                for line in cps:
-                    assert "bf16" in line, (name, line)
-
-            # and the backend keeps the count: n_shards - 1 permutes
-            # per half-sweep, zero all-gathers
-            ctxt = lowered.compile().as_text()
-            ags = re.findall(r"all-gather(?:-start)?\\(", ctxt)
-            assert not ags, (name, mesh_shape, len(ags))
-            cps = re.findall(r"collective-permute(?:-start)?\\(", ctxt)
-            assert len(cps) == E * (S - 1), (name, mesh_shape, len(cps))
+            # like eager reuses its gather), bf16 on the wire when the
+            # model flags it; checked on StableHLO AND the backend
+            c = contract_for(model, mesh_shape, "ring")
+            assert c.all_gathers == 0, c
+            assert c.collective_permutes == E * (S - 1), c
+            assert c.wire_dtype == \\
+                ("bf16" if model.bf16_gather else "f32"), c
+            assert_contract(c, lowered_text=lowered.as_text(),
+                            compiled_text=lowered.compile().as_text(),
+                            where=f"{name}/{mesh_shape}/ring")
             print(name, "x".join(map(str, mesh_shape)),
-                  "collective-permutes", len(cps), "all-gathers 0")
+                  "collective-permutes", c.collective_permutes,
+                  "all-gathers 0")
     print("OK")
 """)
 
 _HLO_SCRIPT = textwrap.dedent("""
-    import os, re
+    import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax
 
+    from repro.analysis.contract import assert_contract, contract_for
     from repro.core import FixedGaussian, MFData, init_state
     from repro.core.blocks import BlockDef, EntityDef, ModelDef
     from repro.core.distributed import make_distributed_step
@@ -626,35 +618,31 @@ _HLO_SCRIPT = textwrap.dedent("""
                                              pipeline="eager")
         lowered = step.lower(data, state)
 
-        # the communication contract, pre-backend: one all-gather of the
-        # fixed factor per half-sweep (2 entities -> exactly 2), carried
-        # in bf16 when the model flags it
-        sh = [l for l in lowered.as_text().splitlines()
-              if "stablehlo.all_gather" in l]
-        assert len(sh) == len(model.entities), sh
-        for line in sh:
-            if bf16:
-                assert "bf16" in line, line
-            else:
-                assert "bf16" not in line, line
-
-        # and the backend keeps it to exactly that many collectives
-        # (XLA:CPU normalizes bf16 collectives to convert-gather-convert
-        # but must not duplicate or split them)
-        txt = lowered.compile().as_text()
-        ags = re.findall(r"all-gather(?:-start)?\\(", txt)
-        assert len(ags) == len(model.entities), txt
-        print("variant", "bf16" if bf16 else "f32", "all-gathers", len(ags))
+        # the communication contract, derived from the ModelDef: one
+        # all-gather of the fixed factor per half-sweep (2 entities ->
+        # exactly 2), carried in bf16 when the model flags it — checked
+        # on StableHLO and on the backend (XLA:CPU normalizes bf16
+        # collectives to convert-gather-convert but must not duplicate
+        # or split them)
+        c = contract_for(model, (8,), "eager")
+        assert c.all_gathers == len(model.entities), c
+        assert c.wire_dtype == ("bf16" if bf16 else "f32"), c
+        assert_contract(c, lowered_text=lowered.as_text(),
+                        compiled_text=lowered.compile().as_text(),
+                        where="bf16" if bf16 else "f32")
+        print("variant", "bf16" if bf16 else "f32",
+              "all-gathers", c.all_gathers)
     print("OK")
 """)
 
 _HLO_WIDENED_SCRIPT = textwrap.dedent("""
-    import os, re
+    import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     import jax
     import jax.numpy as jnp
 
+    from repro.analysis.contract import assert_contract, contract_for
     from repro.core import (FixedGaussian, MFData, ProbitNoise,
                             dense_block, init_state)
     from repro.core.blocks import BlockDef, EntityDef, ModelDef
@@ -707,24 +695,23 @@ _HLO_WIDENED_SCRIPT = textwrap.dedent("""
                                              pipeline="eager")
         lowered = step.lower(data, state)
 
-        # communication contract, pre-backend: ONE all-gather of the
-        # fixed factor per half-sweep, bf16 on the wire when flagged
-        sh = [l for l in lowered.as_text().splitlines()
-              if "stablehlo.all_gather" in l]
-        assert len(sh) == len(model.entities), (name, sh)
-        for line in sh:
-            assert ("bf16" in line) == model.bf16_gather, (name, line)
-
-        txt = lowered.compile().as_text()
-        ags = re.findall(r"all-gather(?:-start)?\\(", txt)
-        assert len(ags) == len(model.entities), (name, len(ags))
-
-        # Macau FtF hoist: the (D, D) side-Gramian is placement-time
-        # data, so NO per-sweep all-reduce carries a DxD payload
-        ftf_psums = [l for l in txt.splitlines()
-                     if "all-reduce" in l and "f32[%d,%d]" % (D, D) in l]
-        assert not ftf_psums, (name, ftf_psums)
-        print(name, "all-gathers", len(ags), "FtF psums", len(ftf_psums))
+        # communication contract, derived from the ModelDef: ONE
+        # all-gather of the fixed factor per half-sweep, bf16 on the
+        # wire when flagged.  The Macau FtF hoist is subsumed by the
+        # payload bound: the contract's max all-reduce payload
+        # (max(K^2, D*K) for Macau) is strictly below the D*D
+        # side-Gramian, so a per-sweep FtF psum would violate it.
+        c = contract_for(model, (8,), "eager")
+        assert c.all_gathers == len(model.entities), (name, c)
+        assert c.wire_dtype == \\
+            ("bf16" if model.bf16_gather else "f32"), (name, c)
+        if name == "macau":
+            assert c.max_reduce_elems == max(K * K, D * K) < D * D, c
+        assert_contract(c, lowered_text=lowered.as_text(),
+                        compiled_text=lowered.compile().as_text(),
+                        where=name)
+        print(name, "all-gathers", c.all_gathers,
+              "max psum elems", c.max_reduce_elems)
     print("OK")
 """)
 

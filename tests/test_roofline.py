@@ -118,3 +118,88 @@ def test_roofline_terms_dominance():
     assert out["compute_s"] == pytest.approx(1.0)
     assert out["memory_s"] == pytest.approx(0.1)
     assert 0 < out["useful_flop_ratio"]
+
+
+# ---------------------------------------------------------------------------
+# collective accounting (async pairs, new kinds, unknown dtypes)
+# ---------------------------------------------------------------------------
+
+_SYNC_COLL = """
+HloModule sync
+
+ENTRY %main (p0: f32[64,8]) -> (f32[512,8], f32[64,8]) {
+  %p0 = f32[64,8]{1,0} parameter(0)
+  %ag = f32[512,8]{1,0} all-gather(f32[64,8]{1,0} %p0), dimensions={0}
+  %ar = f32[64,8]{1,0} all-reduce(f32[64,8]{1,0} %p0), to_apply=%sum
+  ROOT %t = (f32[512,8]{1,0}, f32[64,8]{1,0}) tuple(%ag, %ar)
+}
+"""
+
+# the same program as XLA emits it with async collectives: a -start
+# whose tuple result aliases (operand, result), then a -done
+_ASYNC_COLL = """
+HloModule async
+
+ENTRY %main (p0: f32[64,8]) -> (f32[512,8], f32[64,8]) {
+  %p0 = f32[64,8]{1,0} parameter(0)
+  %ags = (f32[64,8]{1,0}, f32[512,8]{1,0}) all-gather-start(f32[64,8]{1,0} %p0), dimensions={0}
+  %ag = f32[512,8]{1,0} all-gather-done((f32[64,8]{1,0}, f32[512,8]{1,0}) %ags)
+  %ars = f32[64,8]{1,0} all-reduce-start(f32[64,8]{1,0} %p0), to_apply=%sum
+  %ar = f32[64,8]{1,0} all-reduce-done(f32[64,8]{1,0} %ars)
+  ROOT %t = (f32[512,8]{1,0}, f32[64,8]{1,0}) tuple(%ag, %ar)
+}
+"""
+
+
+def test_async_collectives_match_sync_lowering():
+    """Regression: an async pair is ONE transfer.  The old analyzer
+    charged the -start's aliased tuple at full size and the -done
+    again, double-counting every overlapped collective."""
+    sync, async_ = analyze(_SYNC_COLL), analyze(_ASYNC_COLL)
+    assert sync == async_, (sync, async_)
+    # and the numbers are the hand-computed ones, not merely equal
+    ag_b, ar_b = 512 * 8 * 4, 64 * 8 * 4
+    assert sync["collective_bytes"]["all-gather"] == ag_b
+    assert sync["collective_bytes"]["all-reduce"] == 2 * ar_b
+    assert sync["collective_bytes"]["total"] == ag_b + 2 * ar_b
+    assert sync["bytes_accessed"] == ag_b + ar_b
+
+
+def test_new_collective_kinds_counted():
+    text = """
+HloModule kinds
+
+ENTRY %main (p0: f32[64,8]) -> f32[64,8] {
+  %p0 = f32[64,8]{1,0} parameter(0)
+  %cb = f32[64,8]{1,0} collective-broadcast(f32[64,8]{1,0} %p0)
+  %ra = f32[64,8]{1,0} ragged-all-to-all(f32[64,8]{1,0} %cb)
+  ROOT %o = f32[64,8]{1,0} add(f32[64,8]{1,0} %cb, f32[64,8]{1,0} %ra)
+}
+"""
+    coll = analyze(text)["collective_bytes"]
+    b = 64 * 8 * 4
+    assert coll["collective-broadcast"] == b
+    assert coll["ragged-all-to-all"] == b
+    # and ragged-all-to-all is NOT misfiled under all-to-all
+    assert coll["all-to-all"] == 0
+
+
+def test_unknown_dtype_warns_once_and_counts_zero():
+    text = """
+HloModule weird
+
+ENTRY %main (p: f4e2m1fnx[32]) -> f4e2m1fnx[32] {
+  %p = f4e2m1fnx[32]{0} parameter(0)
+  ROOT %n = f4e2m1fnx[32]{0} negate(f4e2m1fnx[32]{0} %p)
+}
+"""
+    import warnings as _w
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        r1 = analyze(text)
+        r2 = analyze(text)          # second pass must stay silent
+    hits = [str(x.message) for x in rec if "f4e2m1fnx" in str(x.message)]
+    assert len(hits) == 1, hits
+    assert "unknown HLO dtype" in hits[0]
+    assert r1["bytes_accessed"] == 0.0
+    assert r1 == r2
