@@ -10,6 +10,7 @@ Sections (paper analogue):
     gfa            §4      GFA simulated-study reproduction
     macau          §4      Macau side-info lift (incl. cold start)
     roofline       §5      roofline summary from the dry-run records
+    serving        §1      RecommendServer latency/QPS under load
 
 Output: CSV rows ``section,name,value,unit,notes``.
 """
@@ -56,6 +57,9 @@ def main() -> None:
     if want("roofline"):
         from . import roofline_table
         roofline_table.run()
+    if want("serving"):
+        from . import serve_latency
+        serve_latency.run(quick=q)
 
     emit("meta", "total_runtime", f"{time.perf_counter() - t0:.1f}",
          "s", "benchmarks.run wall time")

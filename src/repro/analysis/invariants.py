@@ -304,6 +304,49 @@ def _check_nondeterminism(ctx: _Ctx) -> Iterable[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# rule 5: serving request paths never touch the checkpoint loader
+# ---------------------------------------------------------------------------
+
+_SERVING_MODULES = ("launch/serve.py",)
+_CKPT_LOADERS = {"load_pytree", "load_sample", "restore_latest",
+                 "samples", "load_model_spec"}
+
+
+@rule(
+    "checkpoint-load-in-serving-request-path",
+    "serving modules may load the sample store only at construction "
+    "(__init__ / warm*-prefixed functions), never per request",
+    "PR 7: PredictSession re-read the ENTIRE sample store from disk "
+    "on every predict call (R requests = R x S checkpoint loads); "
+    "the resident posterior cache fixed it, and this rule keeps the "
+    "per-request reload structurally unrepresentable in the server",
+)
+def _check_serving_loads(ctx: _Ctx) -> Iterable[Finding]:
+    if ctx.relpath not in _SERVING_MODULES:
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        name = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else "")
+        if name not in _CKPT_LOADERS:
+            continue
+        fname = ctx.enclosing_function(node)
+        if fname == "__init__" or (fname or "").startswith("warm"):
+            continue
+        where = f"in {fname}()" if fname else "at module level"
+        yield ctx.finding(
+            node, "checkpoint-load-in-serving-request-path",
+            f"checkpoint load {name}(...) {where}, a serving request "
+            "path",
+            "load the store ONCE at construction (warm_cache() in "
+            "__init__) and serve every request from the resident "
+            "PosteriorCache; lazy streaming belongs in core/predict, "
+            "not the server")
+
+
+# ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
 

@@ -8,7 +8,10 @@ Public API (mirrors the smurff Python package where sensible):
                                                 (thin builder wrappers)
     PredictSession                            — averaged prediction
                                                 from saved posterior
-                                                samples (save_freq)
+                                                samples (save_freq),
+                                                resident-cached, with
+                                                batched top-K
+                                                recommendation
     NormalPrior, MacauPrior, SpikeAndSlabPrior — priors
     FixedGaussian, AdaptiveGaussian, ProbitNoise — noise models
     SparseMatrix, from_coo, from_dense, dense_block — inputs
@@ -18,7 +21,8 @@ from .blocks import (BlockDef, DenseBlock, EntityDef, ModelDef,
                      dense_block)
 from .gibbs import MFData, MFState, gibbs_step, init_state, run_sweeps
 from .noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
-from .predict import (PredictAccumulator, PredictSession, TestSet, auc,
+from .predict import (PosteriorCache, PredictAccumulator,
+                      PredictSession, RecResult, TestSet, auc,
                       make_test_set, predict_one, rmse)
 from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
                      SpikeAndSlabPrior)
@@ -31,7 +35,8 @@ __all__ = [
     "BlockDef", "DenseBlock", "EntityDef", "ModelDef", "dense_block",
     "MFData", "MFState", "gibbs_step", "init_state", "run_sweeps",
     "AdaptiveGaussian", "FixedGaussian", "ProbitNoise",
-    "PredictAccumulator", "PredictSession", "TestSet", "auc",
+    "PosteriorCache", "PredictAccumulator", "PredictSession",
+    "RecResult", "TestSet", "auc",
     "make_test_set", "predict_one", "rmse",
     "FixedNormalPrior", "MacauPrior", "NormalPrior", "SpikeAndSlabPrior",
     "BlockResult", "GFASession", "ModelBuilder", "Session",

@@ -12,11 +12,28 @@ arbitrary cells of any block, as whole dense blocks, and for rows
 never present in training through the sampled Macau link matrices
 (out-of-matrix prediction, the compound-activity cold-start workflow
 of arXiv:1904.02514).
+
+Serving many requests is where the original lazy design fell over:
+every ``predict``/``predict_all``/``predict_new`` call re-read the
+ENTIRE sample store from disk, so R requests cost R x S checkpoint
+loads.  The structural fix is the **resident posterior cache**
+(:class:`PosteriorCache`): the first request loads the factor stack
+once into ``(S, N, K)`` device arrays (plus the stacked Macau hyper
+draws for cold-start rows), bounded by a byte budget
+(``cache_bytes``, env ``REPRO_PREDICT_CACHE_BYTES``); every later
+request performs ZERO checkpoint loads (asserted via the
+``load_count`` counter in tests/test_serving.py).  Stores above the
+budget keep the lazy streaming path.  ``recommend``/``recommend_rows``
+serve batched top-K item recommendations with posterior mean AND
+uncertainty through the fused ``kernels.topk_score`` scorer — the
+online serving layer ``launch.serve.RecommendServer`` batches
+concurrent requests onto.
 """
 from __future__ import annotations
 
 import os
-from typing import Iterator, List, NamedTuple, Optional, Tuple, Union
+from typing import (Any, Dict, Iterator, List, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -95,8 +112,22 @@ class PredictAccumulator:
 
     @property
     def var(self) -> jnp.ndarray:
+        """Population variance OVER THE POSTERIOR SAMPLES of the
+        per-sample predictions: ``E[p^2] - E[p]^2`` with both moments
+        averaged over the ``n`` accumulated samples (pinned against a
+        hand-rolled oracle in tests/test_predict.py).  This is the
+        posterior-predictive spread of ``u_s . v_s`` — the Bayesian
+        uncertainty of the score — NOT an error bar on the mean
+        estimator (which would shrink with 1/n)."""
         m = self.mean
         return jnp.maximum(self._sum2 / max(self.n, 1) - m * m, 0.0)
+
+    @property
+    def std(self) -> jnp.ndarray:
+        """Posterior standard deviation per prediction: sqrt(var).
+        The uncertainty field the serving layer reports next to every
+        recommended score."""
+        return jnp.sqrt(self.var)
 
     def rmse(self) -> float:
         return float(rmse(self.mean, self.test.v))
@@ -109,6 +140,73 @@ class PredictAccumulator:
 # ---------------------------------------------------------------------------
 # from-disk prediction over saved posterior samples
 # ---------------------------------------------------------------------------
+
+# model.json specs keyed by realpath -> (mtime, spec): every
+# PredictSession pointed at the same store shares one parsed spec
+# instead of re-reading the JSON per instance (a store is written once
+# by the training session; mtime invalidates the entry if it IS
+# rewritten, e.g. by a resumed chain).
+_SPEC_CACHE: Dict[str, Tuple[float, dict]] = {}
+
+DEFAULT_CACHE_BYTES = 1 << 30    # 1 GiB of stacked posterior samples
+
+
+def _load_spec_cached(path: str) -> dict:
+    from .modelspec import load_model_spec
+    try:
+        key = os.path.realpath(path)
+        mtime = os.path.getmtime(path)
+    except OSError:
+        # missing file: fall through for the helpful error message
+        return load_model_spec(path)
+    hit = _SPEC_CACHE.get(key)
+    if hit is not None and hit[0] == mtime:
+        return hit[1]
+    spec = load_model_spec(path)
+    _SPEC_CACHE[key] = (mtime, spec)
+    return spec
+
+
+def _resolve_cache_bytes(cache_bytes: Optional[int]) -> int:
+    if cache_bytes is not None:
+        return int(cache_bytes)
+    env = os.environ.get("REPRO_PREDICT_CACHE_BYTES")
+    return int(env) if env else DEFAULT_CACHE_BYTES
+
+
+class PosteriorCache(NamedTuple):
+    """The whole sample store, resident: one device array per leaf.
+
+    ``factors[e]`` stacks entity ``e``'s sampled factor over the
+    retained chain — shape ``(S, N_e, K)``, the operand layout the
+    fused ``kernels.topk_score`` scorer consumes directly.
+    ``hypers[e]`` stacks the prior hyper pytree the same way (leading
+    ``S`` axis per leaf), which is what out-of-matrix prediction needs
+    (the sampled Macau ``mu_s``/``beta_s`` per retained draw).
+    """
+
+    factors: Tuple[jnp.ndarray, ...]
+    hypers: Tuple[Any, ...]
+    n_samples: int
+
+    def hyper_at(self, entity: int, s: int):
+        """Entity ``entity``'s hyper pytree of retained sample ``s``."""
+        return jax.tree.map(lambda x: x[s], self.hypers[entity])
+
+
+class RecResult(NamedTuple):
+    """Batched top-K recommendations with posterior uncertainty.
+
+    ``ids[b, r]`` is the r-th ranked item for query ``b`` (-1 past the
+    number of rankable items), ``mean``/``std`` the posterior mean and
+    standard deviation of its score over the retained samples (NaN on
+    -1 slots).
+    """
+
+    ids: np.ndarray     # (B, k) int32
+    mean: np.ndarray    # (B, k) float32
+    std: np.ndarray     # (B, k) float32
+
 
 class PredictSession:
     """Serve averaged predictions from a saved posterior-sample store.
@@ -133,22 +231,31 @@ class PredictSession:
       through the sampled link (``MacauPrior.predict_factor``:
       ``mu_s + beta_s^T f``) and contracted against that sample's
       other-entity factor.
+    * ``recommend(user=..., k=...)`` / ``recommend_rows`` — batched
+      top-K item recommendation with posterior mean AND std per score
+      through the fused ``kernels.topk_score`` scorer (the serving
+      path; ``launch.serve.RecommendServer`` batches onto it).
     * ``restore_latest()`` — (step, MFState) of the newest sample, for
       continuing an interrupted chain (``Session.run(resume=True)``
       uses the same store).
 
-    Samples are loaded lazily, one at a time — the store can be much
-    bigger than memory.
+    The first prediction loads the store ONCE into the resident
+    :class:`PosteriorCache` (bounded by ``cache_bytes``); every later
+    request touches only device memory — ``load_count`` counts
+    checkpoint loads and stays flat across repeat requests.  Stores
+    bigger than the budget keep the original lazy one-sample-at-a-time
+    streaming (the store can be much bigger than memory), trading
+    per-request reloads for residency.
     """
 
-    def __init__(self, save_dir: str):
+    def __init__(self, save_dir: str,
+                 cache_bytes: Optional[int] = None):
         from ..checkpoint.ckpt import list_steps
         from .modelspec import (MODEL_SPEC_FILE, SAMPLES_SUBDIR,
-                                load_model_spec, spec_to_model,
-                                state_template)
+                                spec_to_model, state_template)
         self.dir = save_dir
-        self.spec = load_model_spec(os.path.join(save_dir,
-                                                 MODEL_SPEC_FILE))
+        self.spec = _load_spec_cached(os.path.join(save_dir,
+                                                   MODEL_SPEC_FILE))
         self.model = spec_to_model(self.spec)
         self._template = state_template(self.model)
         self._samples_dir = os.path.join(save_dir, SAMPLES_SUBDIR)
@@ -158,6 +265,10 @@ class PredictSession:
                 f"no complete samples under {self._samples_dir}; run "
                 "the session with save_freq > 0 (and let at least one "
                 "post-burnin sweep finish)")
+        self._step_set = frozenset(self.steps)   # O(1) membership
+        self.cache_bytes = _resolve_cache_bytes(cache_bytes)
+        self.load_count = 0          # checkpoint loads, ever
+        self._cache: Optional[PosteriorCache] = None
 
     # -- sample access -----------------------------------------------------
 
@@ -168,9 +279,11 @@ class PredictSession:
     def load_sample(self, step: int):
         """The full sampled ``MFState`` saved at global sweep ``step``."""
         from ..checkpoint.ckpt import load_pytree
-        if step not in self.steps:
+        if step not in self._step_set:
             raise ValueError(
-                f"no sample at step {step}; saved steps: {self.steps}")
+                f"no sample at step {step}; saved steps: "
+                f"{', '.join(map(str, self.steps))}")
+        self.load_count += 1
         return load_pytree(self._template,
                            os.path.join(self._samples_dir,
                                         f"step_{step}"))
@@ -184,6 +297,86 @@ class PredictSession:
         """(step, MFState) of the newest sample — the resume point."""
         last = self.steps[-1]
         return last, self.load_sample(last)
+
+    # -- resident posterior cache ------------------------------------------
+
+    def store_nbytes(self) -> int:
+        """Resident size of the FULL stacked store, estimated from the
+        state template (factor + hyper + noise leaves x num_samples) —
+        what the cache would occupy, computed without loading it."""
+        per_sample = sum(
+            int(np.prod(np.shape(leaf))) * np.dtype(
+                getattr(leaf, "dtype", np.float32)).itemsize
+            for leaf in jax.tree.leaves(self._template))
+        return per_sample * self.num_samples
+
+    @property
+    def cache_resident(self) -> bool:
+        return self._cache is not None
+
+    def warm_cache(self) -> Optional[PosteriorCache]:
+        """Load the store once into the resident cache (idempotent).
+
+        Returns the cache, or None when the store exceeds
+        ``cache_bytes`` — callers then stream samples lazily.  This is
+        the ONLY place serving paths are allowed to touch the
+        checkpoint loader (enforced structurally by the
+        ``checkpoint-load-in-serving-request-path`` invariant rule on
+        ``launch/serve.py``).
+        """
+        if self._cache is not None:
+            return self._cache
+        if self.store_nbytes() > self.cache_bytes:
+            return None
+        n_ent = len(self.model.entities)
+        fac: List[List[np.ndarray]] = [[] for _ in range(n_ent)]
+        hyp: List[List[Any]] = [[] for _ in range(n_ent)]
+        for st in self.samples():
+            for e in range(n_ent):
+                fac[e].append(np.asarray(st.factors[e]))
+                hyp[e].append(st.hypers[e])
+        factors = tuple(jnp.asarray(np.stack(f)) for f in fac)
+        hypers = tuple(
+            jax.tree.map(
+                lambda *xs: jnp.asarray(np.stack(
+                    [np.asarray(x) for x in xs])), *h)
+            for h in hyp)
+        self._cache = PosteriorCache(factors, hypers,
+                                     self.num_samples)
+        return self._cache
+
+    def _factor_iter(self, entity: int) -> Iterator[jnp.ndarray]:
+        """Entity factors per retained sample — from the cache when
+        resident (zero loads), streamed from disk otherwise."""
+        cache = self.warm_cache()
+        if cache is not None:
+            for s in range(cache.n_samples):
+                yield cache.factors[entity][s]
+        else:
+            for st in self.samples():
+                yield jnp.asarray(st.factors[entity])
+
+    def _factor_pair_iter(self, ent_a: int, ent_b: int):
+        cache = self.warm_cache()
+        if cache is not None:
+            for s in range(cache.n_samples):
+                yield (cache.factors[ent_a][s],
+                       cache.factors[ent_b][s])
+        else:
+            for st in self.samples():
+                yield (jnp.asarray(st.factors[ent_a]),
+                       jnp.asarray(st.factors[ent_b]))
+
+    def _hyper_factor_iter(self, entity: int, other: int):
+        """(hyper_s of ``entity``, factor_s of ``other``) per sample."""
+        cache = self.warm_cache()
+        if cache is not None:
+            for s in range(cache.n_samples):
+                yield (cache.hyper_at(entity, s),
+                       cache.factors[other][s])
+        else:
+            for st in self.samples():
+                yield st.hypers[entity], jnp.asarray(st.factors[other])
 
     # -- block/entity resolution -------------------------------------------
 
@@ -229,6 +422,11 @@ class PredictSession:
         same cells to float32 tolerance.  A tuple ``block`` addresses
         (i, j) in the order the tuple names the entities, whichever
         orientation the block was declared in.
+
+        Routed through the resident cache: repeat calls perform zero
+        checkpoint loads (the accumulator runs over the cached device
+        arrays — the same float program, so cached and lazy answers
+        are bitwise equal).
         """
         bi, flipped = self._resolve_block(block)
         blk = self.model.blocks[bi]
@@ -237,9 +435,9 @@ class PredictSession:
         i = np.asarray(i)
         test = make_test_set(i, j, np.zeros(i.shape[0], np.float32))
         acc = PredictAccumulator(test)
-        for st in self.samples():
-            acc.update(jnp.asarray(st.factors[blk.row_entity]),
-                       jnp.asarray(st.factors[blk.col_entity]))
+        for u, v in self._factor_pair_iter(blk.row_entity,
+                                           blk.col_entity):
+            acc.update(u, v)
         if return_var:
             return np.asarray(acc.mean), np.asarray(acc.var)
         return np.asarray(acc.mean)
@@ -254,9 +452,9 @@ class PredictSession:
         bi, flipped = self._resolve_block(block)
         blk = self.model.blocks[bi]
         s = None
-        for st in self.samples():
-            p = jnp.asarray(st.factors[blk.row_entity]) \
-                @ jnp.asarray(st.factors[blk.col_entity]).T
+        for u, v in self._factor_pair_iter(blk.row_entity,
+                                           blk.col_entity):
+            p = u @ v.T
             s = p if s is None else s + p
         out = np.asarray(s / self.num_samples)
         return out.T if flipped else out
@@ -317,8 +515,200 @@ class PredictSession:
                 f"{ent.name!r} was trained with "
                 f"{ent.prior.num_features}")
         s = None
-        for st in self.samples():
-            u = ent.prior.predict_factor(st.hypers[e], F_new)
-            p = u @ jnp.asarray(st.factors[other]).T
+        for hyper, v in self._hyper_factor_iter(e, other):
+            u = ent.prior.predict_factor(hyper, F_new)
+            p = u @ v.T
             s = p if s is None else s + p
         return np.asarray(s / self.num_samples)
+
+    # -- batched top-K recommendation (the serving path) -------------------
+
+    def _block_entities(self, block: Union[int, Tuple[str, str]]
+                        ) -> Tuple[int, int]:
+        """(user_entity, item_entity) of ``block`` — a tuple block
+        names (users, items) in that order; an integer block ranks the
+        column entity's rows as items."""
+        bi, flipped = self._resolve_block(block)
+        blk = self.model.blocks[bi]
+        if flipped:
+            return blk.col_entity, blk.row_entity
+        return blk.row_entity, blk.col_entity
+
+    def user_rows(self, users: Sequence[int],
+                  block: Union[int, Tuple[str, str]] = 0
+                  ) -> jnp.ndarray:
+        """Sampled latent rows of warm users: (B, S, K).
+
+        Gathered from the resident cache when it fits the budget
+        (zero loads); streamed from disk once otherwise.
+        """
+        ue, _ = self._block_entities(block)
+        users = np.asarray(users, np.int32)
+        n_rows = self.model.entities[ue].n_rows
+        bad = users[(users < 0) | (users >= n_rows)]
+        if bad.size:
+            raise ValueError(
+                f"user row(s) {bad.tolist()} out of range for entity "
+                f"{self.model.entities[ue].name!r} with {n_rows} rows;"
+                " unseen rows are served via features= (cold start)")
+        cache = self.warm_cache()
+        if cache is not None:
+            # (S, B, K) -> (B, S, K)
+            return jnp.swapaxes(cache.factors[ue][:, users, :], 0, 1)
+        rows = [np.asarray(f)[users] for f in self._factor_iter(ue)]
+        return jnp.swapaxes(jnp.asarray(np.stack(rows)), 0, 1)
+
+    def cold_rows(self, F_new,
+                  block: Union[int, Tuple[str, str]] = 0
+                  ) -> jnp.ndarray:
+        """Sampled latent rows for UNSEEN users via the Macau link:
+        (M, S, K), one ``mu_s + beta_s^T f`` draw per retained sample
+        (same per-sample mapping as ``predict_new``, kept per sample
+        so top-K scoring sees the full posterior spread)."""
+        from .priors import MacauPrior
+        ue, _ = self._block_entities(block)
+        ent = self.model.entities[ue]
+        if not isinstance(ent.prior, MacauPrior):
+            raise ValueError(
+                f"entity {ent.name!r} has {type(ent.prior).__name__};"
+                " cold-start recommendation needs the Macau "
+                "side-information prior — add_entity(..., "
+                "side_info=F)")
+        F_new = np.atleast_2d(np.asarray(F_new, np.float32))
+        if F_new.shape[1] != ent.prior.num_features:
+            raise ValueError(
+                f"F_new has {F_new.shape[1]} features; entity "
+                f"{ent.name!r} was trained with "
+                f"{ent.prior.num_features}")
+        rows = []
+        cache = self.warm_cache()
+        if cache is not None:
+            for s in range(cache.n_samples):
+                rows.append(ent.prior.predict_factor(
+                    cache.hyper_at(ue, s), F_new))
+        else:
+            for st in self.samples():
+                rows.append(ent.prior.predict_factor(st.hypers[ue],
+                                                     F_new))
+        return jnp.swapaxes(jnp.stack(rows), 0, 1)   # (M, S, K)
+
+    def _exclude_mask(self, exclude, B: int, n_items: int):
+        """Per-query excluded item ids -> (B, n_items) f32 mask."""
+        if exclude is None:
+            return None
+        mask = np.zeros((B, n_items), np.float32)
+        if len(exclude) != B:
+            raise ValueError(
+                f"exclude has {len(exclude)} entries for {B} queries;"
+                " pass one id-sequence (possibly empty) per query")
+        for b, ids in enumerate(exclude):
+            ids = np.asarray(ids, np.int64)
+            if ids.size:
+                if ids.min() < 0 or ids.max() >= n_items:
+                    raise ValueError(
+                        f"exclude ids for query {b} outside "
+                        f"[0, {n_items})")
+                mask[b, ids] = 1.0
+        return mask
+
+    def recommend_rows(self, rows: jnp.ndarray, k: int = 10,
+                       block: Union[int, Tuple[str, str]] = 0,
+                       exclude=None) -> RecResult:
+        """Top-K items for pre-resolved query rows (B, S, K).
+
+        The batched serving primitive: scores every query against the
+        item factor stack across all retained samples through the
+        fused ``kernels.topk_score`` (posterior mean ranking, std
+        reported per score), honoring ``model.use_pallas``.  Queries
+        are scored with one identical float program each regardless of
+        batch size, so a batched call is BITWISE equal to one call per
+        query — the contract that lets ``RecommendServer`` batch
+        concurrent requests (asserted in tests/test_serving.py).
+
+        ``exclude``: one sequence of item ids per query (e.g. the
+        user's already-observed items) left out of the ranking.
+        """
+        rows = jnp.asarray(rows)
+        if rows.ndim != 3:
+            raise ValueError(
+                f"rows must be (B, S, K), got {rows.shape}; build "
+                "them with user_rows()/cold_rows()")
+        _, ie = self._block_entities(block)
+        n_items = self.model.entities[ie].n_rows
+        mask = self._exclude_mask(exclude, rows.shape[0], n_items)
+        cache = self.warm_cache()
+        if cache is not None:
+            ids, mean, std = ops.topk_score(
+                rows, cache.factors[ie], k, exclude=mask,
+                use_pallas=self.model.use_pallas)
+            return RecResult(np.asarray(ids), np.asarray(mean),
+                             np.asarray(std))
+        return self._recommend_rows_lazy(rows, k, ie, mask)
+
+    def _recommend_rows_lazy(self, rows, k, item_entity, mask
+                             ) -> RecResult:
+        """Over-budget fallback: stream the store once, accumulating
+        per-item score moments, then select like the reference.
+        Statistically identical to the cached path; summation order
+        differs, so near-ties MAY rank differently (documented —
+        serving at scale wants the cache)."""
+        B, S, _ = rows.shape
+        mean_sum = None
+        ex2_sum = None
+        for s, v in enumerate(self._factor_iter(item_entity)):
+            p = jnp.einsum("bk,nk->bn", rows[:, s, :], v)
+            mean_sum = p if mean_sum is None else mean_sum + p
+            p2 = p * p
+            ex2_sum = p2 if ex2_sum is None else ex2_sum + p2
+        inv_s = jnp.float32(1.0) / jnp.float32(S)
+        mean = mean_sum * inv_s
+        ex2 = ex2_sum * inv_s
+        std = jnp.sqrt(jnp.maximum(ex2 - mean * mean, 0.0))
+        excl = (jnp.zeros_like(mean) if mask is None
+                else jnp.asarray(mask))
+        rank = jnp.where(excl > 0, -jnp.inf, mean)
+        k_eff = min(int(k), rank.shape[1])
+        order = jnp.argsort(-rank, axis=1)[:, :k_eff]    # stable
+        sel_mean = jnp.take_along_axis(mean, order, axis=1)
+        sel_std = jnp.take_along_axis(std, order, axis=1)
+        n_valid = jnp.sum(excl <= 0, axis=1).astype(jnp.int32)
+        bad = jnp.arange(k_eff, dtype=jnp.int32)[None, :] \
+            >= n_valid[:, None]
+        return RecResult(
+            np.asarray(jnp.where(bad, -1, order.astype(jnp.int32))),
+            np.asarray(jnp.where(bad, jnp.nan, sel_mean)),
+            np.asarray(jnp.where(bad, jnp.nan, sel_std)))
+
+    def recommend(self, user: Optional[Union[int, Sequence[int]]]
+                  = None, *, features=None, k: int = 10,
+                  block: Union[int, Tuple[str, str]] = 0,
+                  exclude=None) -> RecResult:
+        """Top-K recommendation for warm and/or cold users.
+
+        ``user``: row id(s) seen in training; ``features``: (M, D)
+        side-information rows for UNSEEN users, mapped through the
+        sampled Macau link (cold start).  Warm queries come first in
+        the result when both are given.  ``exclude`` follows
+        ``recommend_rows`` (for a single query, a flat id list is
+        accepted).
+        """
+        parts = []
+        n_q = 0
+        if user is not None:
+            users = np.atleast_1d(np.asarray(user, np.int32))
+            parts.append(self.user_rows(users, block))
+            n_q += users.shape[0]
+        if features is not None:
+            cold = self.cold_rows(features, block)
+            parts.append(cold)
+            n_q += cold.shape[0]
+        if not parts:
+            raise ValueError(
+                "pass user= (warm row ids) and/or features= "
+                "(cold-start side info)")
+        if exclude is not None and n_q == 1 and len(exclude) \
+                and np.isscalar(exclude[0]):
+            exclude = [exclude]
+        rows = parts[0] if len(parts) == 1 else \
+            jnp.concatenate(parts, axis=0)
+        return self.recommend_rows(rows, k, block, exclude)

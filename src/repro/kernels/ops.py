@@ -8,14 +8,23 @@ Pallas path in interpret mode.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from . import ref
 from .gram import gram_pallas
 from .sddmm import sddmm_pallas
+from .topk_score import topk_score_pallas
 
 _ON_TPU = jax.default_backend() == "tpu"
+
+# the serving hot loop calls this per service step; eager lax.map
+# dispatch costs more than the scoring itself (measured ~100x on the
+# quick latency benchmark)
+_topk_ref_jit = functools.partial(jax.jit, static_argnums=(3,))(
+    ref.topk_score_ref)
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int):
@@ -48,6 +57,65 @@ def gram_and_rhs(vg: jnp.ndarray, val: jnp.ndarray, mask: jnp.ndarray,
     gram, rhs = gram_pallas(vg_p, val_p, mask_p, block_rows=br,
                             block_nnz=bt, interpret=interpret)
     return gram[:R], rhs[:R]
+
+
+def topk_score(us: jnp.ndarray, v: jnp.ndarray, k: int, *,
+               exclude: jnp.ndarray | None = None,
+               use_pallas: bool = False,
+               interpret: bool | None = None):
+    """Batched posterior scoring + top-K; see kernels/topk_score.py.
+
+    us (B, S, K) user rows per sample, v (S, N, K) item factor stack,
+    ``exclude`` (B, N) truthy = leave out of the ranking ->
+    (ids (B, k') i32, mean (B, k') f32, std (B, k') f32) with
+    k' = min(k, N).  Slots past the number of rankable (non-excluded)
+    items of a row carry id -1 and NaN mean/std — identically on both
+    the kernel and the reference path, so K > n_items clamps instead
+    of surfacing padding artifacts.
+
+    Both paths see the SAME item-padded operands (pad items carry
+    exclude 1.0, an exact ranking no-op) and the std is finalized here
+    from the selected (mean, ex2): shape-dependent vectorization would
+    otherwise drift the two paths by 1 ulp (measured), and the serving
+    contract is fp32 BITWISE kernel == reference.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    B, S, K = us.shape
+    N = v.shape[1]
+    k_eff = min(int(k), N)
+    if exclude is None:
+        excl = jnp.zeros((B, N), jnp.float32)
+    else:
+        excl = jnp.asarray(exclude)
+        if excl.shape != (B, N):
+            raise ValueError(
+                f"exclude shape {excl.shape} != (B, N) = {(B, N)}")
+        excl = (excl > 0).astype(jnp.float32)
+
+    bn = 256
+    v_p, _ = _pad_to(v, 1, bn)
+    pad = v_p.shape[1] - N
+    # padded items are excluded so they can never be selected
+    excl_p = jnp.pad(excl, ((0, 0), (0, pad)), constant_values=1.0)
+
+    if not use_pallas:
+        ids, mean, ex2 = _topk_ref_jit(us, v_p, excl_p, k_eff)
+    else:
+        interpret = (not _ON_TPU) if interpret is None else interpret
+        ids, mean, ex2, _ = topk_score_pallas(
+            us, v_p, excl_p, k=k_eff, block_items=bn,
+            interpret=interpret)
+
+    std = jnp.sqrt(jnp.maximum(ex2 - mean * mean, 0.0))
+    # rows with fewer than k_eff rankable items: invalidate the tail
+    n_valid = jnp.sum(excl <= 0, axis=1).astype(jnp.int32)   # (B,)
+    slot = jnp.arange(k_eff, dtype=jnp.int32)[None, :]
+    bad = slot >= n_valid[:, None]
+    ids = jnp.where(bad, -1, ids)
+    mean = jnp.where(bad, jnp.nan, mean)
+    std = jnp.where(bad, jnp.nan, std)
+    return ids, mean, std
 
 
 def sddmm(ug: jnp.ndarray, vg: jnp.ndarray, *, use_pallas: bool = False,

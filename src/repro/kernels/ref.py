@@ -8,6 +8,7 @@ Eigen/MKL GEMM path).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -45,6 +46,59 @@ def gram_ref(vg: jnp.ndarray, val: jnp.ndarray, mask: jnp.ndarray):
     gram = jnp.einsum("rtk,rtl->rkl", vg * m[..., None], vg)
     rhs = jnp.einsum("rtk,rt->rk", vg, w)
     return gram, rhs
+
+
+def topk_score_ref(us: jnp.ndarray, v: jnp.ndarray,
+                   excl: jnp.ndarray, k: int):
+    """Posterior scoring + stable top-K — the serving oracle.
+
+    For each user b (scored against every item across every retained
+    posterior sample):
+        score[s, n] = us[b, s] . v[s, n]
+        mean[n]     = 1/S sum_s score[s, n]
+        std[n]      = sqrt(max(E[score^2] - mean^2, 0))
+    ranked by mean with excluded items at -inf; ties broken by LOWEST
+    item id (stable argsort).
+
+    Users are scored through ``lax.map`` — one identical float program
+    per user regardless of batch size — so a batched call is bitwise
+    equal to B single-user calls.  This is the contract that lets
+    ``RecommendServer`` batch concurrent requests without changing any
+    individual answer (asserted in tests/test_serving.py); the Pallas
+    kernel preserves it by scoring each user in its own grid row.
+
+    Args:
+      us:   (B, S, K) user latent rows, one per posterior sample.
+      v:    (S, N, K) item factor stack.
+      excl: (B, N) 1.0 = excluded from the ranking.
+      k:    static top-K (callers clamp to k <= N).
+
+    Returns:
+      ids (B, k) i32, mean (B, k) f32, ex2 (B, k) f32.  The std is
+      finalized by ``ops.topk_score`` from (mean, ex2) with one shared
+      (B, k) float program for both paths (see kernels/topk_score.py
+      on why per-path finalization broke bitwise equality).
+    """
+    S = v.shape[0]
+    bf16 = us.dtype == jnp.bfloat16 and v.dtype == jnp.bfloat16
+    if not bf16:
+        us = us.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+    inv_s = jnp.float32(1.0) / jnp.float32(S)
+
+    def one_user(args):
+        u, ex = args                              # (S, K), (N,)
+        # per-sample scores; bf16 operands keep the pre-contraction
+        # ops in bf16 (same discipline as gram_ref), f32 accumulation
+        scores = jnp.einsum("snk,sk->sn", v, u,
+                            preferred_element_type=jnp.float32)
+        mean = jnp.sum(scores, axis=0) * inv_s
+        ex2 = jnp.sum(scores * scores, axis=0) * inv_s
+        rank = jnp.where(ex > 0, -jnp.inf, mean)
+        order = jnp.argsort(-rank)[:k].astype(jnp.int32)  # stable
+        return order, mean[order], ex2[order]
+
+    return jax.lax.map(one_user, (us, excl))
 
 
 def sddmm_ref(ug: jnp.ndarray, vg: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,153 @@
+"""Fused posterior-scoring + top-K Pallas-TPU kernel.
+
+The serving hot path (ROADMAP "recommendations as a service"; the
+compound-activity prediction-at-scale story of arXiv:1904.02514 §1)
+scores one user row against ALL items across ALL retained posterior
+samples and keeps only the K best:
+
+    score[s, n] = u_s . V_s[n]            per sample s, item n
+    mean[n]     = 1/S sum_s score[s, n]   posterior mean
+    ex2[n]      = 1/S sum_s score[s, n]^2
+    std[n]      = sqrt(max(ex2 - mean^2, 0))   posterior uncertainty
+
+A naive implementation materializes the (S, n_items) score matrix per
+request — at catalogue scale (millions of items, ~100 samples) that is
+hundreds of MB of HBM traffic per user.  This kernel tiles the item
+axis and fuses the three stages, so only a (S, BN) score *tile* ever
+exists in VMEM:
+
+  grid = (B users, n_items / BN); the item axis is the minor (fastest
+  varying) dimension so each user's running top-K state stays resident
+  in VMEM while item tiles stream through (revisiting pattern).  Per
+  tile the MXU computes the S-batched (BN, K) x (K,) scores, the VPU
+  reduces over samples, and a K-step unrolled selection merges the
+  tile's means into the running top-K (ids, mean, ex2, masked ranking
+  score).  ``ops.topk_score`` converts the selected ex2 to the
+  posterior std AFTER the kernel, with the same (B, k)-shaped float
+  program the reference path uses — shape-dependent FMA fusion of
+  ``ex2 - mean*mean`` is what broke bitwise equality when each path
+  finalized its own std (measured: 1-ulp drift).
+
+Tie-breaking contract: equal posterior means rank by LOWEST item id —
+``jnp.argmax`` takes the first occurrence and the running top-K stores
+candidates in (rank desc, id asc) order, so the merge reproduces the
+stable ``jnp.argsort`` reference (``ref.topk_score_ref``) bitwise in
+fp32, asserted in tests/test_kernels.py.
+
+Excluded items (already-observed entries a request does not want
+re-recommended) enter the ranking at -inf but keep their true
+mean/ex2; slots beyond the number of rankable items are masked at the
+``ops.topk_score`` level, identically for kernel and reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(us_ref, v_ref, excl_ref, ids_ref, mean_ref, ex2_ref,
+                 rank_ref, *, k: int, block_items: int,
+                 n_samples: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        ids_ref[...] = jnp.full((1, k), -1, jnp.int32)
+        mean_ref[...] = jnp.zeros((1, k), jnp.float32)
+        rank_ref[...] = jnp.full((1, k), -jnp.inf, jnp.float32)
+        ex2_ref[...] = jnp.zeros((1, k), jnp.float32)
+
+    us = us_ref[0]                         # (S, K)
+    v = v_ref[...]                         # (S, BN, K)
+    excl = excl_ref[0]                     # (BN,)
+
+    # MXU: per-sample scores for this item tile, f32 accumulation
+    scores = jax.lax.dot_general(
+        v, us,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)          # (S, BN)
+    inv_s = jnp.float32(1.0) / jnp.float32(n_samples)
+    mean_t = jnp.sum(scores, axis=0) * inv_s         # (BN,)
+    ex2_t = jnp.sum(scores * scores, axis=0) * inv_s
+    rank_t = jnp.where(excl > 0, -jnp.inf, mean_t)
+
+    # merge the tile into the running top-K.  Current top entries come
+    # FIRST so argmax's first-occurrence tie-break keeps the lowest
+    # item id (top entries always carry lower ids than this tile's).
+    base = t * block_items
+    tile_ids = base + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_items), 1)[0]
+    cand_rank = jnp.concatenate([rank_ref[0], rank_t])
+    cand_mean = jnp.concatenate([mean_ref[0], mean_t])
+    cand_ex2 = jnp.concatenate([ex2_ref[0], ex2_t])
+    cand_ids = jnp.concatenate([ids_ref[0], tile_ids])
+    n_cand = k + block_items
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_cand), 1)[0]
+
+    sel_rank, sel_mean, sel_ex2, sel_ids = [], [], [], []
+    for _ in range(k):                     # k static: unrolled
+        pos = jnp.argmax(cand_rank)        # first occurrence on ties
+        hot = pos_iota == pos
+        sel_rank.append(jnp.max(cand_rank))
+        sel_mean.append(jnp.sum(jnp.where(hot, cand_mean, 0.0)))
+        sel_ex2.append(jnp.sum(jnp.where(hot, cand_ex2, 0.0)))
+        sel_ids.append(jnp.sum(jnp.where(hot, cand_ids, 0)))
+        cand_rank = jnp.where(hot, -jnp.inf, cand_rank)
+
+    rank_ref[...] = jnp.stack(sel_rank)[None, :]
+    mean_ref[...] = jnp.stack(sel_mean)[None, :]
+    ex2_ref[...] = jnp.stack(sel_ex2)[None, :]
+    ids_ref[...] = jnp.stack(sel_ids)[None, :].astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_items", "interpret"))
+def topk_score_pallas(us: jnp.ndarray, v: jnp.ndarray,
+                      excl: jnp.ndarray, *, k: int,
+                      block_items: int = 256,
+                      interpret: bool = False):
+    """Fused scoring + top-K: see module docstring.
+
+    us (B, S, K) user latent rows per sample, v (S, N, K) item factor
+    stack, excl (B, N) 1.0 = excluded from ranking  ->
+    ids (B, k) i32, mean (B, k) f32, ex2 (B, k) f32, rank (B, k) f32
+    (the masked selection scores; callers discard them).  N must be
+    divisible by ``block_items`` (callers pad; padded items carry
+    excl 1.0).
+    """
+    B, S, K = us.shape
+    S2, N, K2 = v.shape
+    if (S, K) != (S2, K2):
+        raise ValueError(f"us {us.shape} vs v {v.shape} mismatch")
+    bn = min(block_items, N)
+    if N % bn:
+        raise ValueError(f"n_items {N} not divisible by tile {bn}")
+    n_tiles = N // bn
+    kern = functools.partial(_topk_kernel, k=k, block_items=bn,
+                             n_samples=S)
+
+    return pl.pallas_call(
+        kern,
+        grid=(B, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, S, K), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((S, bn, K), lambda b, t: (0, t, 0)),
+            pl.BlockSpec((1, bn), lambda b, t: (b, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(us, v, excl)

@@ -1,0 +1,25 @@
+# repro-lint: treat-as=launch/serve.py
+"""Seeded violations: checkpoint loads on serving request paths.
+
+Construction-time loads (``__init__`` / ``warm*``) are the allowed
+pattern and must NOT be flagged.
+"""
+
+
+class LeakyServer:
+    def __init__(self, session):
+        self.session = session
+        self.cache = session.warm_cache()       # construction: fine
+
+    def warm_extra(self, step):
+        return self.session.load_sample(step)   # warm*-prefixed: fine
+
+    def step(self):
+        st = self.session.load_sample(0)  # expect: checkpoint-load-in-serving-request-path
+        for s in self.session.samples():  # expect: checkpoint-load-in-serving-request-path
+            st = s
+        return st
+
+    def resume(self, template, path):
+        from repro.checkpoint.ckpt import load_pytree
+        return load_pytree(template, path)  # expect: checkpoint-load-in-serving-request-path

@@ -125,3 +125,120 @@ def test_gram_padding_invariance(R, T, K, seed):
     g2, r2 = ref.gram_ref(vg2, val2, mask2)
     np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(r1, r2, rtol=1e-5, atol=1e-5)
+
+
+# -- topk_score: the serving kernel ---------------------------------------
+
+def _topk_both(us, v, k, excl=None):
+    """ops.topk_score through both paths; kernel in interpret mode."""
+    a = ops.topk_score(us, v, k, exclude=excl, use_pallas=False)
+    b = ops.topk_score(us, v, k, exclude=excl, use_pallas=True)
+    return a, b
+
+
+def _assert_bitwise(a, b):
+    """Exact equality per field; NaN slots (invalid tail) must match
+    positionally."""
+    for x, y in zip(a, b):
+        x, y = np.asarray(x), np.asarray(y)
+        nx, ny = np.isnan(x), np.isnan(y)
+        np.testing.assert_array_equal(nx, ny)
+        np.testing.assert_array_equal(x[~nx], y[~ny])
+
+
+@pytest.mark.parametrize("B,S,N,K,k", [
+    (1, 1, 1, 1, 1), (2, 8, 64, 16, 10), (5, 8, 130, 16, 7),
+    (3, 16, 256, 8, 300), (4, 4, 33, 12, 5), (2, 50, 512, 16, 20),
+])
+def test_topk_kernel_matches_ref_bitwise(B, S, N, K, k):
+    """The serving contract: fused kernel == argsort oracle BITWISE in
+    fp32 (ids, posterior mean, posterior std), uneven n_items
+    included (both paths see the same item padding)."""
+    key = jax.random.PRNGKey(B * 7 + N)
+    k1, k2, k3 = jax.random.split(key, 3)
+    us = jax.random.normal(k1, (B, S, K), jnp.float32)
+    v = jax.random.normal(k2, (S, N, K), jnp.float32)
+    excl = (jax.random.uniform(k3, (B, N)) < 0.2).astype(jnp.float32)
+    a, b = _topk_both(us, v, k, excl)
+    assert a[0].shape == (B, min(k, N))   # K > n_items clamps
+    _assert_bitwise(a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 12), st.integers(1, 200),
+       st.integers(1, 12), st.integers(1, 30),
+       st.integers(0, 2**31 - 1))
+def test_topk_property_kernel_equals_ref(B, S, N, K, k, seed):
+    """Property sweep over uneven n_items / K > n_items / exclusion
+    density (up to whole rows excluded): bitwise agreement, -1/NaN
+    invalid-tail contract included."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    us = jax.random.normal(k1, (B, S, K), jnp.float32)
+    v = jax.random.normal(k2, (S, N, K), jnp.float32)
+    dens = jax.random.uniform(k4, (B, 1))   # some rows ~fully excluded
+    excl = (jax.random.uniform(k3, (B, N)) < dens).astype(jnp.float32)
+    a, b = _topk_both(us, v, k, excl)
+    _assert_bitwise(a, b)
+    ids, mean, std = (np.asarray(x) for x in a)
+    n_valid = int(np.sum(np.asarray(excl)[0] <= 0))
+    k_eff = min(k, N)
+    assert ids.shape == (B, k_eff)
+    # invalid tail: id -1 slots carry NaN mean/std, exactly past n_valid
+    assert (ids[0, n_valid:k_eff] == -1).all()
+    assert np.isnan(mean[0, min(n_valid, k_eff):]).all()
+    valid = ids[0, :min(n_valid, k_eff)]
+    assert (valid >= 0).all() and len(set(valid.tolist())) == len(valid)
+
+
+def test_topk_tied_scores_rank_by_lowest_id():
+    """Tie-break contract vs an independent numpy oracle: integer
+    latents make the posterior means exact in fp32, so ties are exact
+    and must rank by LOWEST item id on both paths (the stable-argsort
+    order)."""
+    rng = np.random.default_rng(3)
+    B, S, N, K, k = 3, 4, 57, 8, 12
+    us = rng.integers(-2, 3, (B, S, K)).astype(np.float32)
+    v = rng.integers(-2, 3, (S, N, K)).astype(np.float32)
+    a, b = _topk_both(jnp.asarray(us), jnp.asarray(v), k)
+    _assert_bitwise(a, b)
+    mean_o = np.einsum("bsk,snk->bsn", us, v).mean(axis=1)  # exact ints
+    for row in range(B):
+        oracle = np.argsort(-mean_o[row], kind="stable")[:k]
+        np.testing.assert_array_equal(np.asarray(a[0])[row], oracle)
+    assert len(np.unique(mean_o[0])) < N   # ties actually occurred
+
+
+def test_topk_all_tied_is_identity_prefix():
+    """Fully degenerate scores (all zero) must return items 0..k-1."""
+    us = jnp.zeros((2, 4, 8), jnp.float32)
+    v = jnp.zeros((4, 100, 8), jnp.float32)
+    a, b = _topk_both(us, v, 5)
+    _assert_bitwise(a, b)
+    np.testing.assert_array_equal(np.asarray(a[0]),
+                                  np.tile(np.arange(5), (2, 1)))
+
+
+def test_topk_bf16_stack_matches_ref():
+    """bf16 factor stacks: both paths keep operands bf16 into the
+    contraction (f32 accumulation) and still agree bitwise; the means
+    stay close to the f32 computation."""
+    key = jax.random.PRNGKey(11)
+    k1, k2 = jax.random.split(key)
+    us = jax.random.normal(k1, (3, 8, 16), jnp.float32)
+    v = jax.random.normal(k2, (8, 130, 16), jnp.float32)
+    a, b = _topk_both(us.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+                      6)
+    _assert_bitwise(a, b)
+    f32, _ = _topk_both(us, v, 6)
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(f32[1]),
+                               rtol=0.05, atol=0.15)
+
+
+def test_topk_validation_errors():
+    us = jnp.zeros((2, 3, 4), jnp.float32)
+    v = jnp.zeros((3, 10, 4), jnp.float32)
+    with pytest.raises(ValueError, match="k must be"):
+        ops.topk_score(us, v, 0)
+    with pytest.raises(ValueError, match="exclude shape"):
+        ops.topk_score(us, v, 2, exclude=jnp.zeros((3, 10)))

@@ -74,3 +74,56 @@ def test_auc_input_order_invariant_under_ties():
 def test_auc_degenerate_classes_nan():
     assert np.isnan(auc(np.array([0.1, 0.9]), np.array([1.0, 1.0])))
     assert np.isnan(auc(np.array([0.1, 0.9]), np.array([0.0, 0.0])))
+
+
+# -- PredictAccumulator posterior variance --------------------------------
+
+def test_accumulator_var_matches_moment_oracle():
+    """``var == E[p^2] - E[p]^2`` with both moments over the
+    accumulated POSTERIOR SAMPLES — the posterior-predictive spread of
+    the per-sample predictions, pinned against a hand-rolled oracle —
+    and ``std`` is its square root (the serving uncertainty field)."""
+    from repro.core.predict import PredictAccumulator, make_test_set
+
+    rng = np.random.default_rng(1)
+    n_rows, n_latent, n_cells, n_samp = 12, 4, 30, 7
+    i = rng.integers(0, n_rows, n_cells)
+    j = rng.integers(0, n_rows, n_cells)
+    acc = PredictAccumulator(
+        make_test_set(i, j, np.zeros(n_cells, np.float32)))
+    preds = []
+    for _ in range(n_samp):
+        U = rng.normal(size=(n_rows, n_latent)).astype(np.float32)
+        V = rng.normal(size=(n_rows, n_latent)).astype(np.float32)
+        acc.update(U, V)
+        preds.append((U[i] * V[j]).sum(axis=1))
+    P = np.stack(preds)                       # (S, E) oracle samples
+    mean_o = P.mean(axis=0)
+    var_o = np.maximum((P * P).mean(axis=0) - mean_o ** 2, 0.0)
+    np.testing.assert_allclose(acc.mean, mean_o, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(acc.var, var_o, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(acc.std, np.sqrt(var_o),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_accumulator_var_does_not_shrink_with_n():
+    """The var is the spread OVER samples, not a mean-estimator error
+    bar: feeding the same two alternating samples many times keeps the
+    variance fixed instead of shrinking it by 1/n."""
+    from repro.core.predict import PredictAccumulator, make_test_set
+
+    rng = np.random.default_rng(2)
+    U0 = rng.normal(size=(4, 3)).astype(np.float32)
+    U1 = rng.normal(size=(4, 3)).astype(np.float32)
+    V = rng.normal(size=(4, 3)).astype(np.float32)
+    test = make_test_set([0, 1], [2, 3], np.zeros(2, np.float32))
+
+    def spread(reps):
+        acc = PredictAccumulator(test)
+        for _ in range(reps):
+            acc.update(U0, V)
+            acc.update(U1, V)
+        return np.asarray(acc.var)
+
+    np.testing.assert_allclose(spread(1), spread(20),
+                               rtol=1e-5, atol=1e-7)

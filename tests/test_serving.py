@@ -1,0 +1,268 @@
+"""The posterior serving layer: resident cache + RecommendServer.
+
+Pins the three contracts ISSUE 7 introduced:
+
+* the RELOAD BUG stays fixed — after the first request warms the
+  resident cache, every further ``predict``/``predict_all``/
+  ``predict_new``/``recommend`` performs ZERO checkpoint loads
+  (``PredictSession.load_count`` stays flat);
+* BATCHING CHANGES NO ANSWER — ``RecommendServer`` results are
+  bitwise equal to sequential ``PredictSession.recommend`` calls
+  (each query runs one identical float program whatever the batch);
+* the slot runtime's request ids are collision-free — monotonic
+  defaults survive queue drains, explicit duplicates raise.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveGaussian, ModelBuilder, PredictSession,
+                        from_coo)
+from repro.launch.serve import RecommendServer, SlotServer
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory):
+    """A small saved Macau store: (save_dir, F, obs, n_warm)."""
+    rng = np.random.default_rng(0)
+    n_c, n_t, n_feat, rank = 36, 20, 6, 3
+    F = rng.normal(size=(n_c, n_feat)).astype(np.float32)
+    B = (rng.normal(size=(n_feat, rank)) / np.sqrt(n_feat)) \
+        .astype(np.float32)
+    T = rng.normal(size=(n_t, rank)).astype(np.float32)
+    act = (F @ B @ T.T).astype(np.float32)
+    n_warm = n_c - 4                       # last 4 rows never trained
+    obs = rng.random((n_warm, n_t)) < 0.6
+    i, j = np.nonzero(obs)
+    mat = from_coo(i, j, act[i, j], (n_warm, n_t))
+    d = tmp_path_factory.mktemp("serving_store")
+    b = ModelBuilder(num_latent=4)
+    b.add_entity("compound", n_warm, side_info=F[:n_warm])
+    b.add_entity("target", n_t)
+    b.add_block("compound", "target", mat, noise=AdaptiveGaussian())
+    b.session(burnin=5, nsamples=6, seed=0, save_freq=1,
+              save_dir=str(d)).run()
+    return str(d), F, obs, n_warm
+
+
+# -- the reload bug stays fixed -------------------------------------------
+
+def test_second_request_zero_checkpoint_loads(store):
+    """The acceptance criterion: warming costs exactly S loads, every
+    later request of ANY kind costs zero."""
+    d, F, _, n_warm = store
+    p = PredictSession(d)
+    assert p.load_count == 0
+    p.recommend(user=[0, 1], k=3)
+    assert p.load_count == p.num_samples    # the one-time warm
+    warm = p.load_count
+    p.recommend(user=[2, 3], k=5)
+    p.recommend(features=F[n_warm:], k=3)
+    p.predict([0, 1], [2, 3])
+    p.predict_all()
+    p.predict_new("compound", F[n_warm:])
+    assert p.load_count == warm
+    assert p.cache_resident
+
+
+def test_cached_predict_bitwise_equals_lazy(store):
+    """Routing predict through the cache keeps the identical float
+    program: cached and lazy answers are bitwise equal."""
+    d, F, _, n_warm = store
+    cached = PredictSession(d)
+    lazy = PredictSession(d, cache_bytes=0)
+    assert lazy.warm_cache() is None
+    i, j = [0, 5, 9], [1, 2, 3]
+    np.testing.assert_array_equal(cached.predict(i, j),
+                                  lazy.predict(i, j))
+    np.testing.assert_array_equal(cached.predict_all(),
+                                  lazy.predict_all())
+    np.testing.assert_array_equal(
+        cached.predict_new("compound", F[n_warm:]),
+        lazy.predict_new("compound", F[n_warm:]))
+    assert not lazy.cache_resident and lazy.load_count > 0
+
+
+def test_over_budget_recommend_falls_back(store):
+    """Stores above the byte budget still serve recommendations (the
+    streaming fallback): same ids, means to float tolerance."""
+    d, _, _, _ = store
+    cached = PredictSession(d).recommend(user=[0, 1, 2], k=5)
+    lazy = PredictSession(d, cache_bytes=0).recommend(user=[0, 1, 2],
+                                                      k=5)
+    np.testing.assert_array_equal(cached.ids, lazy.ids)
+    np.testing.assert_allclose(cached.mean, lazy.mean,
+                               rtol=1e-6, atol=1e-7)
+    # std subtracts near-equal moments (sqrt(ex2 - mean^2)); the
+    # different summation order amplifies the cancellation
+    np.testing.assert_allclose(cached.std, lazy.std,
+                               rtol=1e-3, atol=1e-6)
+
+
+def test_store_nbytes_gates_residency(store):
+    d, _, _, _ = store
+    p = PredictSession(d)
+    assert 0 < p.store_nbytes() < p.cache_bytes
+    assert PredictSession(d, cache_bytes=0).store_nbytes() \
+        == p.store_nbytes()
+
+
+def test_spec_cached_across_instances(store):
+    """model.json parses once per store (mtime-keyed), not once per
+    PredictSession."""
+    d, _, _, _ = store
+    assert PredictSession(d).spec is PredictSession(d).spec
+
+
+def test_load_sample_unknown_step_still_raises(store):
+    d, _, _, _ = store
+    p = PredictSession(d)
+    with pytest.raises(ValueError, match="no sample at step"):
+        p.load_sample(10**9)
+
+
+# -- recommend: the session-level API -------------------------------------
+
+def test_recommend_batched_equals_sequential_bitwise(store):
+    d, F, _, n_warm = store
+    p = PredictSession(d)
+    users = [0, 3, 7, 11]
+    batched = p.recommend(user=users, k=5)
+    for b, u in enumerate(users):
+        single = p.recommend(user=u, k=5)
+        np.testing.assert_array_equal(batched.ids[b], single.ids[0])
+        np.testing.assert_array_equal(batched.mean[b], single.mean[0])
+        np.testing.assert_array_equal(batched.std[b], single.std[0])
+
+
+def test_recommend_exclusion_and_clamping(store):
+    d, _, obs, _ = store
+    p = PredictSession(d)
+    seen = np.nonzero(obs[0])[0]
+    r = p.recommend(user=[0], k=8, exclude=[seen])
+    assert not set(r.ids[0][r.ids[0] >= 0]) & set(seen.tolist())
+    n_items = obs.shape[1]
+    big = p.recommend(user=[0], k=n_items + 50)
+    assert big.ids.shape == (1, n_items)          # K > n_items clamps
+    # excluding all but two items leaves a -1/NaN tail
+    almost = list(range(n_items - 2))
+    t = p.recommend(user=[0], k=5, exclude=[almost])
+    assert (t.ids[0][2:] == -1).all()
+    assert np.isnan(t.mean[0][2:]).all() and (t.ids[0][:2] >= 0).all()
+
+
+def test_recommend_cold_start_matches_predict_new(store):
+    """Cold-start ranking must agree with the out-of-matrix posterior
+    mean: the top recommended item is predict_new's argmax row-wise,
+    and the reported mean matches its value."""
+    d, F, _, n_warm = store
+    p = PredictSession(d)
+    dense = p.predict_new("compound", F[n_warm:])     # (4, n_items)
+    rec = p.recommend(features=F[n_warm:], k=3)
+    for m in range(dense.shape[0]):
+        assert rec.ids[m, 0] == int(np.argmax(dense[m]))
+        np.testing.assert_allclose(rec.mean[m, 0], dense[m].max(),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_recommend_validation(store):
+    d, F, _, n_warm = store
+    p = PredictSession(d)
+    with pytest.raises(ValueError, match="cold start"):
+        p.recommend(user=n_warm + 100)      # out of range names fix
+    with pytest.raises(ValueError, match="user="):
+        p.recommend()
+    with pytest.raises(ValueError, match="one id-sequence"):
+        p.recommend(user=[0, 1], k=3, exclude=[[1]])
+
+
+# -- RecommendServer: the batched online layer ----------------------------
+
+def test_recommend_server_bitwise_vs_sequential(store):
+    """The e2e acceptance: a full mixed workload (warm, cold,
+    exclusions, per-request k) served through the batching runtime is
+    bitwise identical to one-at-a-time PredictSession calls."""
+    d, F, obs, n_warm = store
+    sess = PredictSession(d)
+    srv = RecommendServer(sess, slots=3, k=5)
+    warm_loads = sess.load_count
+    reqs = {}
+    for u in range(7):
+        excl = np.nonzero(obs[u])[0] if u % 2 else None
+        reqs[srv.submit(user=u, exclude=excl)] = ("warm", u, excl)
+    reqs[srv.submit(features=F[n_warm], k=3)] = ("cold", n_warm, None)
+    done = {r["id"]: r for r in srv.run()}
+    assert len(done) == len(reqs)
+    assert sess.load_count == warm_loads     # zero loads while serving
+    for rid, (kind, u, excl) in reqs.items():
+        if kind == "warm":
+            seq = sess.recommend(user=u, k=5,
+                                 exclude=None if excl is None
+                                 else [excl])
+        else:
+            seq = sess.recommend(features=F[u:u + 1], k=3)
+        np.testing.assert_array_equal(done[rid]["ids"], seq.ids[0])
+        np.testing.assert_array_equal(done[rid]["mean"], seq.mean[0])
+        np.testing.assert_array_equal(done[rid]["std"], seq.std[0])
+        assert done[rid]["t_done"] >= done[rid]["t_submit"]
+
+
+def test_recommend_server_refuses_over_budget_store(store):
+    d, _, _, _ = store
+    with pytest.raises(ValueError, match="resident"):
+        RecommendServer(PredictSession(d, cache_bytes=0))
+
+
+def test_recommend_server_request_validation(store):
+    d, F, _, _ = store
+    srv = RecommendServer(PredictSession(d))
+    with pytest.raises(ValueError, match="exactly one"):
+        srv.submit(user=0, features=F[0])
+    with pytest.raises(ValueError, match="exactly one"):
+        srv.submit()
+    with pytest.raises(ValueError, match="one .D,. row"):
+        srv.submit(features=F[:2])
+
+
+# -- the shared slot runtime ----------------------------------------------
+
+class _EchoServer(SlotServer):
+    """Trivial service: each step completes every active request."""
+
+    def submit(self, payload, req_id=None):
+        return self._enqueue({"payload": payload}, req_id)
+
+    def step(self):
+        for s, req in enumerate(self.active):
+            if req is not None:
+                req["echo"] = req["payload"]
+                self._finish(s)
+
+
+def test_slot_ids_monotonic_across_queue_drains():
+    """The original bug: ``r{len(queue)}`` reused ids once the queue
+    drained; ids must never repeat across a server's lifetime."""
+    srv = _EchoServer(slots=2)
+    a = srv.submit("x")
+    srv.run()
+    b = srv.submit("y")                 # queue drained in between
+    srv.run()
+    assert a != b
+    assert len({r["id"] for r in srv.done}) == 2
+
+
+def test_slot_duplicate_explicit_id_raises_naming_clash():
+    srv = _EchoServer(slots=2)
+    srv.submit("x", req_id="dup")
+    with pytest.raises(ValueError, match="'dup'"):
+        srv.submit("y", req_id="dup")
+    srv.run()
+    srv.submit("z", req_id="dup")       # reusable once completed
+    assert len(srv.run()) == 2
+
+
+def test_slot_server_more_requests_than_slots():
+    srv = _EchoServer(slots=2)
+    ids = [srv.submit(i) for i in range(7)]
+    done = srv.run()
+    assert [r["id"] for r in done] == ids      # FIFO admission
+    assert [r["echo"] for r in done] == list(range(7))
