@@ -1,0 +1,35 @@
+"""Turn `python -m repro.analysis --json` output into GitHub
+workflow annotations.
+
+Reads the JSON findings payload on stdin, prints one
+``::error file=...,line=...`` command per finding (GitHub renders
+these inline on the PR diff), and exits 1 if there were any — so
+piping through this script preserves the lint job's failure status:
+
+    python -m repro.analysis --json | python scripts_dev/github_annotations.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main() -> int:
+    payload = json.load(sys.stdin)
+    findings = payload.get("findings", [])
+    for f in findings:
+        # annotation text must be single-line; %0A would be literal
+        msg = " ".join(str(f.get("message", "")).split())
+        hint = " ".join(str(f.get("hint", "")).split())
+        if hint:
+            msg = f"{msg} (fix: {hint})"
+        print(f"::error file={f.get('path', '')},"
+              f"line={f.get('line', 0)},"
+              f"title={f.get('rule', 'finding')}::{msg}")
+    n = payload.get("count", len(findings))
+    print(f"{len(findings)} finding(s) annotated", file=sys.stderr)
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

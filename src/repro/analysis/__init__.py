@@ -12,9 +12,16 @@ Two passes, one CLI (``python -m repro.analysis``):
   any ``ModelDef`` by :func:`contract_for` and verified against
   StableHLO + compiled HLO, replacing the hand-copied collective
   regexes that used to live in ``tests/test_distributed.py``.
+* :mod:`repro.analysis.kernelcheck` — Pallas kernel contract verifier
+  (PR 8): enumerates every registered kernel's grid over its shipped
+  block configs without a TPU and proves race-freedom, block bounds,
+  fp32 accumulation, and the per-grid-step VMEM budget
+  (``python -m repro.analysis --kernels``).
 """
 from .contract import (CommContract, ContractViolation,  # noqa: F401
                        assert_contract, check_compiled, check_lowered,
                        contract_for, dryrun_contract_findings)
 from .invariants import (RULES, Finding, LintRule,  # noqa: F401
                          lint_paths, lint_source, resolve_rules)
+from .kernelcheck import (KERNEL_RULE_IDS, check_kernel_paths,  # noqa: F401
+                          check_kernels, vmem_report)

@@ -7,6 +7,15 @@ Usage::
     python -m repro.analysis path1.py dir2/     # lint specific paths
     python -m repro.analysis --rules batch-rng-in-sweep-path
     python -m repro.analysis --contracts results/dryrun
+    python -m repro.analysis --kernels          # Pallas kernel
+                                                # contract verifier
+    python -m repro.analysis --kernels fix1.py  # verify standalone
+                                                # kernel files (their
+                                                # own KERNELS registry)
+    python -m repro.analysis --json             # machine-readable
+                                                # findings (CI turns
+                                                # these into GitHub
+                                                # annotations)
     python -m repro.analysis --list-rules
 
 Exit status is 0 when no findings, 1 otherwise — CI runs this on
@@ -15,6 +24,7 @@ every push.
 from __future__ import annotations
 
 import argparse
+import json as _json
 import sys
 from pathlib import Path
 
@@ -29,11 +39,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Invariant linter + communication-contract "
-                    "checker for the repro tree.")
+                    "checker + Pallas kernel contract verifier for "
+                    "the repro tree.")
     ap.add_argument(
         "paths", nargs="*", type=Path,
         help="files/directories to lint (default: the whole "
-             "repro package)")
+             "repro package); with --kernels, standalone kernel "
+             "files to verify instead")
     ap.add_argument(
         "--rules", default="all",
         help="comma-separated rule ids, or 'all' (default)")
@@ -42,6 +54,17 @@ def main(argv=None) -> int:
         help="audit dry-run JSONs in DIR against freshly derived "
              "contracts (given alone, skips the lint pass); the "
              "no-argument invocation audits results/dryrun if present")
+    ap.add_argument(
+        "--kernels", action="store_true",
+        help="run the Pallas kernel contract verifier over the "
+             "kernels.ops registry (given alone, skips the lint and "
+             "contract passes); with paths, verifies those files' "
+             "own KERNELS registries instead of linting them")
+    ap.add_argument(
+        "--json", action="store_true",
+        help="emit findings as one JSON object on stdout "
+             "({findings: [{path, line, rule, message, hint}], "
+             "count}) instead of text lines")
     ap.add_argument(
         "--list-rules", action="store_true",
         help="print the rule catalogue and exit")
@@ -57,28 +80,52 @@ def main(argv=None) -> int:
     except ValueError as e:
         ap.error(str(e))
 
-    n = 0
-    run_lint = bool(args.paths) or args.contracts is None
-    if run_lint:
-        findings = invariants.lint_paths(args.paths or None, rules)
+    findings = []           # Finding objects
+    contract_msgs = []      # plain strings from the contract audit
+
+    if args.kernels:
+        from . import kernelcheck
+        if args.paths:
+            findings.extend(
+                kernelcheck.check_kernel_paths(args.paths, rules))
+        else:
+            findings.extend(kernelcheck.check_kernels(rules=rules))
+    else:
+        run_lint = bool(args.paths) or args.contracts is None
+        if run_lint:
+            findings.extend(
+                invariants.lint_paths(args.paths or None, rules))
+
+        contracts_dir = args.contracts
+        if contracts_dir is None and not args.paths \
+                and _DEFAULT_DRYRUN.is_dir():
+            contracts_dir = _DEFAULT_DRYRUN
+        if contracts_dir is not None:
+            from .contract import dryrun_contract_findings
+            jsons = sorted(Path(contracts_dir).glob("*.json"))
+            if not jsons:
+                print(f"{contracts_dir}: no dry-run JSONs to audit",
+                      file=sys.stderr)
+            for j in jsons:
+                for msg in dryrun_contract_findings(j):
+                    contract_msgs.append((j, msg))
+
+    n = len(findings) + len(contract_msgs)
+    if args.json:
+        recs = [{"path": f.path, "line": f.line, "rule": f.rule,
+                 "message": f.message, "hint": f.hint}
+                for f in findings]
+        recs += [{"path": str(j), "line": 0, "rule": "dryrun-contract",
+                  "message": msg,
+                  "hint": "regenerate via python -m "
+                          "repro.launch.mf_dryrun"}
+                 for j, msg in contract_msgs]
+        print(_json.dumps({"findings": recs, "count": n}, indent=1))
+    else:
         for f in findings:
             print(f.format())
-        n += len(findings)
-
-    contracts_dir = args.contracts
-    if contracts_dir is None and not args.paths \
-            and _DEFAULT_DRYRUN.is_dir():
-        contracts_dir = _DEFAULT_DRYRUN
-    if contracts_dir is not None:
-        from .contract import dryrun_contract_findings
-        jsons = sorted(Path(contracts_dir).glob("*.json"))
-        if not jsons:
-            print(f"{contracts_dir}: no dry-run JSONs to audit",
-                  file=sys.stderr)
-        for j in jsons:
-            for msg in dryrun_contract_findings(j):
-                print(msg)
-                n += 1
+        for _, msg in contract_msgs:
+            print(msg)
 
     print(f"repro.analysis: {n} finding(s)", file=sys.stderr)
     return 1 if n else 0

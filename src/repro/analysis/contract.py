@@ -295,4 +295,35 @@ def dryrun_contract_findings(json_path) -> List[str]:
         out.append(f"{p}: contract_ok is not true — the compiled "
                    "HLO violated its contract at generation time: "
                    f"{rec.get('contract_violations')}")
+    out.extend(_kernel_vmem_findings(p, rec))
+    return out
+
+
+def _kernel_vmem_findings(p: Path, rec: dict) -> List[str]:
+    """Audit the ``kernel_vmem`` column (PR 8): the per-kernel VMEM
+    estimates baked into the record must match a fresh
+    ``kernelcheck.vmem_report`` over the shipped registry (memoized —
+    one capture pass covers all audited JSONs) and every kernel must
+    be inside its budget."""
+    out: List[str] = []
+    if "kernel_vmem" not in rec:
+        return [f"{p}: missing kernel_vmem column — regenerate with "
+                "`python -m repro.launch.mf_dryrun`"]
+    from .kernelcheck import vmem_report
+    fresh = vmem_report()
+    stored = rec["kernel_vmem"]
+    for name, want in fresh.items():
+        got = stored.get(name)
+        if got is None:
+            out.append(f"{p}: kernel_vmem missing kernel {name!r}")
+            continue
+        for k in ("peak_bytes", "budget_bytes", "ok"):
+            if got.get(k) != want[k]:
+                out.append(
+                    f"{p}: kernel_vmem[{name!r}][{k!r}] = "
+                    f"{got.get(k)!r} but a fresh estimate says "
+                    f"{want[k]!r}")
+    if not rec.get("kernel_vmem_ok", False):
+        out.append(f"{p}: kernel_vmem_ok is not true — a kernel "
+                   "blew its VMEM budget at generation time")
     return out

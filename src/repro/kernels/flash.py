@@ -20,7 +20,13 @@ k index; optional sliding window.  Fully-masked k-blocks are skipped
 via ``pl.when`` on the block indices.
 
 Validated against ``models/layers._flash_fwd`` / ``ref.py`` maths in
-``tests/test_flash.py`` (interpret mode; shape/dtype sweeps).
+``tests/test_flash.py`` (interpret mode; shape/dtype sweeps) and the
+materialized-score oracle ``ref.attention_ref`` in
+``tests/test_kernels.py``.  Contract-checked: the ``ki == 0`` scratch
+init, the ``ki == n_kb - 1`` single final output write, bounds, fp32
+scratch accumulation, and the VMEM budget are statically verified
+over the ``ops.KERNELS`` probe envelope by
+``repro.analysis.kernelcheck``.
 """
 from __future__ import annotations
 

@@ -20,6 +20,11 @@ single fused pass, tiled so VMEM only ever holds a
 The MXU does the heavy lifting: the (BR, BT, K) x (BR, BT, K) batched
 outer-product reduction lowers to a dot_general with K x K output per
 row, which is MXU-shaped when K is a multiple of 128.
+
+Contract-checked: the ``@pl.when(t == 0)`` init / ``t != 0``
+accumulate discipline below, the block bounds, fp32 accumulation, and
+the VMEM budget are statically verified over the ``ops.KERNELS``
+probe envelope by ``repro.analysis.kernelcheck`` (CI ``--kernels``).
 """
 from __future__ import annotations
 

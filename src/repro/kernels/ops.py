@@ -1,19 +1,39 @@
 """Public kernel entry points.
 
-``gram_and_rhs`` / ``sddmm`` dispatch between the Pallas kernel (TPU
-target; ``interpret=True`` on CPU) and the pure-jnp oracle, controlled
-by the ``use_pallas`` flag carried in the session config.  On this
-container (CPU-only) the default is the XLA path; tests exercise the
-Pallas path in interpret mode.
+``gram_and_rhs`` / ``sddmm`` / ``topk_score`` dispatch between the
+Pallas kernel (TPU target; ``interpret=True`` on CPU) and the pure-jnp
+oracle, controlled by the ``use_pallas`` flag carried in the session
+config.  On this container (CPU-only) the default is the XLA path;
+tests exercise the Pallas path in interpret mode.
+
+Kernel contracts
+----------------
+Every kernel shipped from this package is registered in ``KERNELS``
+below and statically verified — grid race-freedom, block bounds over
+the shared padding path, fp32 accumulation, and a per-grid-step VMEM
+budget — by ``repro.analysis.kernelcheck`` (CI: ``python -m
+repro.analysis --kernels``; rule catalogue in
+``src/repro/analysis/README.md``).  The registry's probes are the
+supported shape envelope: the checker concretely enumerates each
+kernel's grid over exactly these configurations, so a new kernel, a
+new block size, or a bigger serving store belongs in a new
+:class:`KernelProbe` **first** — the CPU container only ever runs
+kernels in interpret mode, and the checker is what stands between a
+grid bug and its first real-TPU execution.  All wrapper padding goes
+through :func:`pad_to_blocks` so the bounds checker verifies a single
+padding path.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Any, Callable, Mapping, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
+from .flash import flash_fwd_pallas
 from .gram import gram_pallas
 from .sddmm import sddmm_pallas
 from .topk_score import topk_score_pallas
@@ -27,14 +47,28 @@ _topk_ref_jit = functools.partial(jax.jit, static_argnums=(3,))(
     ref.topk_score_ref)
 
 
-def _pad_to(x: jnp.ndarray, axis: int, mult: int):
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x, n
+def pad_to_blocks(x: jnp.ndarray,
+                  multiples: Mapping[int, int]) -> jnp.ndarray:
+    """Pad the trailing edge of the given axes of ``x`` up to the next
+    multiple of each block size (zero fill).
+
+    ``multiples`` maps axis -> block multiple.  Returns ``x`` itself
+    when every axis is already aligned, so the aligned fast path adds
+    no ops.  This is the ONE padding path every Pallas wrapper uses;
+    ``repro.analysis.kernelcheck`` verifies the resulting grids stay
+    in bounds for uneven tails, so new wrappers must route their
+    padding through here too.
+    """
     widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths), n
+    need = False
+    for ax, mult in multiples.items():
+        if mult < 1:
+            raise ValueError(
+                f"block multiple for axis {ax} must be >= 1, got {mult}")
+        pad = (-x.shape[ax]) % mult
+        widths[ax] = (0, pad)
+        need = need or pad > 0
+    return jnp.pad(x, widths) if need else x
 
 
 def gram_and_rhs(vg: jnp.ndarray, val: jnp.ndarray, mask: jnp.ndarray,
@@ -48,12 +82,10 @@ def gram_and_rhs(vg: jnp.ndarray, val: jnp.ndarray, mask: jnp.ndarray,
         return ref.gram_ref(vg, val, mask)
     interpret = (not _ON_TPU) if interpret is None else interpret
     br, bt = 8, 128
-    vg_p, R = _pad_to(vg, 0, br)
-    vg_p, _ = _pad_to(vg_p, 1, bt)
-    val_p, _ = _pad_to(val, 0, br)
-    val_p, _ = _pad_to(val_p, 1, bt)
-    mask_p, _ = _pad_to(mask, 0, br)
-    mask_p, _ = _pad_to(mask_p, 1, bt)
+    R = vg.shape[0]
+    vg_p = pad_to_blocks(vg, {0: br, 1: bt})
+    val_p = pad_to_blocks(val, {0: br, 1: bt})
+    mask_p = pad_to_blocks(mask, {0: br, 1: bt})
     gram, rhs = gram_pallas(vg_p, val_p, mask_p, block_rows=br,
                             block_nnz=bt, interpret=interpret)
     return gram[:R], rhs[:R]
@@ -94,7 +126,7 @@ def topk_score(us: jnp.ndarray, v: jnp.ndarray, k: int, *,
         excl = (excl > 0).astype(jnp.float32)
 
     bn = 256
-    v_p, _ = _pad_to(v, 1, bn)
+    v_p = pad_to_blocks(v, {1: bn})
     pad = v_p.shape[1] - N
     # padded items are excluded so they can never be selected
     excl_p = jnp.pad(excl, ((0, 0), (0, pad)), constant_values=1.0)
@@ -125,10 +157,136 @@ def sddmm(ug: jnp.ndarray, vg: jnp.ndarray, *, use_pallas: bool = False,
         return ref.sddmm_ref(ug, vg)
     interpret = (not _ON_TPU) if interpret is None else interpret
     be, bk = 512, 128
-    ug_p, E = _pad_to(ug, 0, be)
-    ug_p, _ = _pad_to(ug_p, 1, bk)
-    vg_p, _ = _pad_to(vg, 0, be)
-    vg_p, _ = _pad_to(vg_p, 1, bk)
+    E = ug.shape[0]
+    ug_p = pad_to_blocks(ug, {0: be, 1: bk})
+    vg_p = pad_to_blocks(vg, {0: be, 1: bk})
     out = sddmm_pallas(ug_p, vg_p, block_e=be, block_k=bk,
                        interpret=interpret)
     return out[:E]
+
+
+# ---------------------------------------------------------------------------
+# kernel registry: the statically-verified shape envelope
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelProbe:
+    """One concrete configuration the checker enumerates.
+
+    ``call(*arrays)`` must drive the public wrapper with the Pallas
+    path forced (so the wrapper's padding arithmetic is part of what
+    gets verified); ``args`` are ``jax.ShapeDtypeStruct`` operands —
+    the probe is traced with ``jax.eval_shape``, never executed.
+    """
+    label: str
+    args: Tuple[Any, ...]
+    call: Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Registry entry for one shipped Pallas kernel."""
+    name: str
+    probes: Tuple[KernelProbe, ...]
+    vmem_budget: int                 # per-grid-step resident bytes
+    jit_fns: Tuple[Any, ...] = ()    # jitted entries to cache-clear
+    #                                  around capture (see kernelcheck)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _gram_call(vg, val, mask):
+    return gram_and_rhs(vg, val, mask, use_pallas=True)
+
+
+def _sddmm_call(ug, vg):
+    return sddmm(ug, vg, use_pallas=True)
+
+
+def _topk_call(k):
+    def call(us, v):
+        return topk_score(us, v, k, use_pallas=True)
+    return call
+
+
+def _topk_call_excl(k):
+    def call(us, v, ex):
+        return topk_score(us, v, k, exclude=ex, use_pallas=True)
+    return call
+
+
+def _flash_call(**kw):
+    def call(q, k, v):
+        return flash_fwd_pallas(q, k, v, **kw)
+    return call
+
+
+_BF16 = jnp.bfloat16
+
+KERNELS = {
+    "gram": KernelSpec(
+        "gram",
+        probes=(
+            KernelProbe("production r64 t256 K128",
+                        (_sds((64, 256, 128)), _sds((64, 256)),
+                         _sds((64, 256))), _gram_call),
+            KernelProbe("uneven tail r13 t257 K33",
+                        (_sds((13, 257, 33)), _sds((13, 257)),
+                         _sds((13, 257))), _gram_call),
+            KernelProbe("bf16 gathered operands",
+                        (_sds((16, 130, 32), _BF16),
+                         _sds((16, 130), _BF16),
+                         _sds((16, 130), _BF16)), _gram_call),
+        ),
+        vmem_budget=4 << 20,
+        jit_fns=(gram_pallas,)),
+    "sddmm": KernelSpec(
+        "sddmm",
+        probes=(
+            KernelProbe("production e4096 K128",
+                        (_sds((4096, 128)), _sds((4096, 128))),
+                        _sddmm_call),
+            KernelProbe("uneven tail e1025 K200",
+                        (_sds((1025, 200)), _sds((1025, 200))),
+                        _sddmm_call),
+        ),
+        vmem_budget=2 << 20,
+        jit_fns=(sddmm_pallas,)),
+    "topk_score": KernelSpec(
+        "topk_score",
+        probes=(
+            KernelProbe("serving b8 s32 n4096 K32 k100",
+                        (_sds((8, 32, 32)), _sds((32, 4096, 32))),
+                        _topk_call(100)),
+            KernelProbe("catalogue b4 s64 n2048 K64 k100",
+                        (_sds((4, 64, 64)), _sds((64, 2048, 64))),
+                        _topk_call(100)),
+            KernelProbe("uneven tail + exclusions b3 s8 n130 k7",
+                        (_sds((3, 8, 16)), _sds((8, 130, 16)),
+                         _sds((3, 130))), _topk_call_excl(7)),
+        ),
+        vmem_budget=12 << 20,
+        jit_fns=(topk_score_pallas,)),
+    "flash": KernelSpec(
+        "flash",
+        probes=(
+            KernelProbe("causal GQA b2 s256 h4/2 hd128",
+                        (_sds((2, 256, 4, 128)), _sds((2, 256, 2, 128)),
+                         _sds((2, 256, 2, 128))),
+                        _flash_call(causal=True)),
+            KernelProbe("windowed decode offset s64 vs 256",
+                        (_sds((1, 64, 4, 16)), _sds((1, 256, 2, 16)),
+                         _sds((1, 256, 2, 16))),
+                        _flash_call(causal=True, window=128,
+                                    q_offset=192)),
+            KernelProbe("noncausal bf16 uneven s130",
+                        (_sds((1, 130, 2, 8), _BF16),
+                         _sds((1, 130, 1, 8), _BF16),
+                         _sds((1, 130, 1, 8), _BF16)),
+                        _flash_call(causal=False)),
+        ),
+        vmem_budget=4 << 20,
+        jit_fns=(flash_fwd_pallas,)),
+}

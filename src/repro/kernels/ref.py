@@ -101,6 +101,48 @@ def topk_score_ref(us: jnp.ndarray, v: jnp.ndarray,
     return jax.lax.map(one_user, (us, excl))
 
 
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """Plain-softmax attention oracle for ``flash_fwd_pallas``.
+
+    Materializes the full (Sq, Sk) score matrix in f32 — exactly what
+    the flash kernel exists to avoid — and applies the same
+    position-based masking: query position ``q_offset + row``, causal
+    ``kpos <= qpos``, optional sliding window ``kpos > qpos - window``.
+    GQA (H a multiple of KVH) repeats each kv head over its G query
+    heads.  Rows with every key masked out return 0, matching the
+    kernel's ``l == 0`` guard.
+
+    Args:
+      q: (B, Sq, H, hd); k/v: (B, Sk, KVH, hd).
+
+    Returns:
+      (B, Sq, H, hd) in q's dtype.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) / jnp.sqrt(
+        jnp.float32(hd))
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        ok = kpos <= qpos
+        if window > 0:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok[None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)
+
+
 def sddmm_ref(ug: jnp.ndarray, vg: jnp.ndarray) -> jnp.ndarray:
     """Gathered-operand SDDMM: pred[e] = ug[e] . vg[e].
 

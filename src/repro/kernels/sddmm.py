@@ -8,6 +8,10 @@ The gather U[i[e]], V[j[e]] happens outside the kernel (XLA gather is
 efficient and Pallas-TPU dynamic gathers are not); the kernel fuses the
 elementwise product + K-reduction with explicit VMEM tiling so the
 (E, K) operand slabs stream through VMEM once.
+
+Contract-checked: the K-axis revisit-accumulate discipline, bounds,
+fp32 accumulation, and VMEM budget are statically verified over the
+``ops.KERNELS`` probe envelope by ``repro.analysis.kernelcheck``.
 """
 from __future__ import annotations
 

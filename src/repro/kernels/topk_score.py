@@ -38,6 +38,13 @@ Excluded items (already-observed entries a request does not want
 re-recommended) enter the ranking at -inf but keep their true
 mean/ex2; slots beyond the number of rankable items are masked at the
 ``ops.topk_score`` level, identically for kernel and reference.
+
+Contract-checked: the item-axis revisit-accumulate discipline (all
+four outputs init under ``@pl.when(t == 0)`` before any merge read),
+bounds over the shared ``ops.pad_to_blocks`` padding, fp32/i32 state
+dtypes, and the VMEM budget of the serving envelope are statically
+verified over the ``ops.KERNELS`` probes by
+``repro.analysis.kernelcheck``.
 """
 from __future__ import annotations
 

@@ -309,6 +309,12 @@ def lower_cell(cell: MFCell, mesh, variant: str):
     }
     if violations:
         rec["contract_violations"] = violations
+    # audited per-kernel VMEM estimates (PR 8): the same report the
+    # `python -m repro.analysis` dry-run audit re-derives and compares
+    from ..analysis.kernelcheck import vmem_report
+    kv = vmem_report()
+    rec["kernel_vmem"] = kv
+    rec["kernel_vmem_ok"] = all(v["ok"] for v in kv.values())
     return rec
 
 

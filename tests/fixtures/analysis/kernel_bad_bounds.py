@@ -1,0 +1,44 @@
+# repro-lint: treat-as=kernels/fixture.py
+"""Seeded violation: ceil-grid over an UNPADDED operand.  The wrapper
+computes a ceiling grid but never routes the operand through
+``ops.pad_to_blocks``, so the last grid point's block hangs off the
+end of the array — the uneven-tail bug the shared padding helper
+exists to prevent."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ops import KernelProbe, KernelSpec
+
+
+def _scale_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def scale_unpadded(x, *, block_e=512):
+    E = x.shape[0]
+    grid = ((E + block_e - 1) // block_e,)      # ceil — but no pad!
+    return pl.pallas_call(
+        _scale_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda e: (e,)),  # expect: kernel-block-out-of-bounds
+        ],
+        out_specs=pl.BlockSpec(
+            (block_e,), lambda e: (e,)),  # expect: kernel-block-out-of-bounds
+        out_shape=jax.ShapeDtypeStruct((E,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+KERNELS = {
+    "scale_unpadded": KernelSpec(
+        "scale_unpadded",
+        probes=(
+            KernelProbe(
+                "uneven tail e1030",
+                (jax.ShapeDtypeStruct((1030,), jnp.float32),),
+                scale_unpadded),
+        ),
+        vmem_budget=4 << 20),
+}

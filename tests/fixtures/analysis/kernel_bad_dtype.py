@@ -1,0 +1,55 @@
+# repro-lint: treat-as=kernels/fixture.py
+"""Seeded violations: a contraction with no
+``preferred_element_type=jnp.float32`` (the MXU will accumulate bf16
+inputs in bf16) and a bf16 OUTPUT used as the across-grid accumulator
+(every partial sum rounds to bf16).  The race discipline itself is
+correct here — only the dtypes are wrong."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ops import KernelProbe, KernelSpec
+
+
+def _bf16_acc_kernel(x_ref, y_ref, o_ref):
+    t = pl.program_id(1)
+    part = jax.lax.dot_general(  # expect: kernel-accum-dtype
+        x_ref[...], y_ref[...], (((1,), (1,)), ((), ())))
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = part.astype(o_ref.dtype)  # expect: kernel-accum-dtype
+
+    @pl.when(t != 0)
+    def _acc():
+        o_ref[...] += part.astype(o_ref.dtype)
+
+
+def bf16_gram(x, y, *, block_r=8, block_t=128):
+    R, T = x.shape
+    return pl.pallas_call(
+        _bf16_acc_kernel,
+        grid=(R // block_r, T // block_t),
+        in_specs=[
+            pl.BlockSpec((block_r, block_t), lambda r, t: (r, t)),
+            pl.BlockSpec((block_r, block_t),
+                         lambda r, t: (r, t)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_r), lambda r, t: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, block_r), jnp.bfloat16),
+        interpret=True,
+    )(x, y)
+
+
+KERNELS = {
+    "bf16_gram": KernelSpec(
+        "bf16_gram",
+        probes=(
+            KernelProbe(
+                "bf16 r8 t256",
+                (jax.ShapeDtypeStruct((8, 256), jnp.bfloat16),
+                 jax.ShapeDtypeStruct((8, 256), jnp.bfloat16)),
+                bf16_gram),
+        ),
+        vmem_budget=4 << 20),
+}

@@ -1,0 +1,43 @@
+# repro-lint: treat-as=kernels/fixture.py
+"""Seeded violation: revisit-accumulate output with NO first-visit
+init guard.  The out spec maps every t to the same (r,) block, so the
++= below reads uninitialized VMEM at t == 0 — the bug class
+kernels/gram.py's ``@pl.when(t == 0)`` pattern exists to prevent."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ops import KernelProbe, KernelSpec
+
+
+def _racy_kernel(x_ref, o_ref):
+    t = pl.program_id(1)
+    del t                                       # never used as a guard
+    o_ref[...] += jnp.sum(x_ref[...], axis=1)  # expect: kernel-output-race
+
+
+def racy_rowsum(x, *, block_rows=4, block_t=128):
+    R, T = x.shape
+    return pl.pallas_call(
+        _racy_kernel,
+        grid=(R // block_rows, T // block_t),
+        in_specs=[
+            pl.BlockSpec((block_rows, block_t), lambda r, t: (r, t)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda r, t: (r,)),
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+KERNELS = {
+    "racy_rowsum": KernelSpec(
+        "racy_rowsum",
+        probes=(
+            KernelProbe(
+                "r8 t256",
+                (jax.ShapeDtypeStruct((8, 256), jnp.float32),),
+                racy_rowsum),
+        ),
+        vmem_budget=4 << 20),
+}

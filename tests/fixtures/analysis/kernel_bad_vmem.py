@@ -1,0 +1,40 @@
+# repro-lint: treat-as=kernels/fixture.py
+"""Seeded violation: a block configuration whose per-grid-step
+resident bytes (double-buffered tiles) dwarf the kernel's VMEM
+budget.  One (64, 4096, 128) f32 input tile is ~134 MB — it compiles
+fine in interpret mode and OOMs only on real TPU hardware, which is
+exactly why the checker estimates it statically."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ops import KernelProbe, KernelSpec
+
+
+def _mean_kernel(v_ref, o_ref):
+    o_ref[...] = jnp.mean(v_ref[...], axis=(0, 1))
+
+
+def whole_stack_mean(v):
+    S, N, K = v.shape
+    return pl.pallas_call(  # expect: kernel-vmem-budget
+        _mean_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((S, N, K), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((K,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((K,), jnp.float32),
+        interpret=True,
+    )(v)
+
+
+KERNELS = {
+    "whole_stack_mean": KernelSpec(
+        "whole_stack_mean",
+        probes=(
+            KernelProbe(
+                "whole catalogue resident s64 n4096 K128",
+                (jax.ShapeDtypeStruct((64, 4096, 128), jnp.float32),),
+                whole_stack_mean),
+        ),
+        vmem_budget=8 << 20),
+}

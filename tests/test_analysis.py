@@ -312,3 +312,187 @@ def test_cli_contract_audit_catches_tampered_json(tmp_path):
     out = _run_cli("--contracts", str(tmp_path))
     assert out.returncode == 1, out.stdout + out.stderr
     assert "all_gathers" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel contract verifier (PR 8)
+# ---------------------------------------------------------------------------
+
+KERNEL_FIXTURES = sorted(p.name for p in FIXTURES.glob("kernel_bad_*.py"))
+
+
+def test_kernel_fixture_set_is_complete():
+    """One seeded fixture per kernel rule (the four contract classes)."""
+    assert KERNEL_FIXTURES == [
+        "kernel_bad_bounds.py", "kernel_bad_dtype.py",
+        "kernel_bad_race.py", "kernel_bad_vmem.py"]
+
+
+def test_kernel_rules_registered_in_catalogue():
+    from repro.analysis import KERNEL_RULE_IDS
+    from repro.analysis.invariants import RULES
+    for rid in KERNEL_RULE_IDS:
+        assert rid in RULES
+        assert [r.id for r in resolve_rules(rid)] == [rid]
+
+
+@pytest.mark.parametrize("name", KERNEL_FIXTURES)
+def test_kernel_fixture_violations_at_marked_lines(name):
+    from repro.analysis import check_kernel_paths
+    path = FIXTURES / name
+    expected = _expected(path)
+    assert expected, f"{name} has no # expect: markers"
+    found = {(f.line, f.rule)
+             for f in check_kernel_paths([path])}
+    assert found == expected, (name, found, expected)
+
+
+def test_kernel_rule_selection_scopes_the_pass():
+    from repro.analysis import check_kernel_paths
+    only_vmem = check_kernel_paths(
+        [FIXTURES / "kernel_bad_race.py"],
+        resolve_rules("kernel-vmem-budget"))
+    assert only_vmem == []
+
+
+def test_kernel_suppression_comment_silences_finding(tmp_path):
+    from repro.analysis import check_kernel_paths
+    src = (FIXTURES / "kernel_bad_race.py").read_text()
+    quiet = tmp_path / "kernel_suppressed.py"
+    quiet.write_text(src.replace(
+        "# expect: kernel-output-race",
+        "# repro-lint: disable=kernel-output-race"))
+    assert check_kernel_paths([quiet]) == []
+
+
+def test_kernel_file_without_registry_is_an_error(tmp_path):
+    from repro.analysis import check_kernel_paths
+    bare = tmp_path / "no_registry.py"
+    bare.write_text("x = 1\n")
+    with pytest.raises(ValueError, match="KERNELS registry"):
+        check_kernel_paths([bare])
+
+
+@pytest.mark.slow
+def test_shipped_kernel_registry_proves_clean():
+    """The real tree: all four kernels, all shipped block configs —
+    race-free, in bounds, fp32-accumulating, inside VMEM budget."""
+    from repro.analysis import check_kernels, vmem_report
+    findings = check_kernels()
+    assert findings == [], "\n".join(f.format() for f in findings)
+    report = vmem_report()
+    assert sorted(report) == ["flash", "gram", "sddmm", "topk_score"]
+    for name, r in report.items():
+        assert r["ok"], (name, r)
+        assert 0 < r["peak_bytes"] <= r["budget_bytes"], (name, r)
+
+
+@pytest.mark.slow
+def test_kernel_capture_is_repeatable():
+    """Back-to-back captures see every pallas_call site both times
+    (jit/eval_shape caches must not swallow the second pass) and the
+    kernels still execute correctly afterwards (the capture shim must
+    not poison real traces)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.analysis.kernelcheck import capture_spec
+    from repro.kernels import ops, ref
+    spec = ops.KERNELS["gram"]
+    first = capture_spec(spec)
+    second = capture_spec(spec)
+    assert len(first) == len(second) == len(spec.probes)
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vg = jax.random.normal(k1, (8, 128, 16), jnp.float32)
+    val = jax.random.normal(k2, (8, 128), jnp.float32)
+    mask = (jax.random.uniform(k3, (8, 128)) > 0.3).astype(jnp.float32)
+    g1, r1 = ops.gram_and_rhs(vg, val, mask, use_pallas=True)
+    g2, r2 = ref.gram_ref(vg, val, mask)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-4)
+    assert float(jnp.sum(jnp.abs(g1))) > 0   # not the shim's zeros
+
+
+@pytest.mark.slow
+def test_cli_kernels_exits_zero_on_shipped_registry():
+    out = _run_cli("--kernels", timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "0 finding(s)" in out.stderr
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", KERNEL_FIXTURES)
+def test_cli_kernels_exits_nonzero_on_each_seeded_fixture(name):
+    out = _run_cli("--kernels", str(FIXTURES / name), timeout=600)
+    assert out.returncode == 1, out.stdout + out.stderr
+    for line, rule_id in _expected(FIXTURES / name):
+        assert f"{name}:{line}: [{rule_id}]" in out.stdout, \
+            (name, line, rule_id, out.stdout)
+
+
+# ---------------------------------------------------------------------------
+# --json output mode (CI turns these into GitHub annotations)
+# ---------------------------------------------------------------------------
+
+def test_json_mode_emits_machine_readable_findings(capsys):
+    from repro.analysis.__main__ import main
+    rc = main([str(FIXTURES / "bad_registry_error.py"), "--json"])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["count"] == len(payload["findings"]) > 0
+    f = payload["findings"][0]
+    assert set(f) == {"path", "line", "rule", "message", "hint"}
+    assert f["rule"] == "registry-error-without-choices"
+    assert f["line"] > 0 and f["hint"]
+
+
+def test_json_mode_clean_input_is_empty_payload(capsys):
+    from repro.analysis.__main__ import main
+    rc = main([str(FIXTURES / "suppressed_clean.py"), "--json"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload == {"findings": [], "count": 0}
+
+
+def test_github_annotations_script_formats_findings(tmp_path):
+    script = REPO_ROOT / "scripts_dev" / "github_annotations.py"
+    payload = json.dumps({"findings": [
+        {"path": "src/x.py", "line": 7, "rule": "some-rule",
+         "message": "broke it", "hint": "fix it"}], "count": 1})
+    out = subprocess.run(
+        [sys.executable, str(script)], input=payload,
+        capture_output=True, text=True, timeout=60)
+    assert out.returncode == 1
+    assert "::error file=src/x.py,line=7,title=some-rule::" in out.stdout
+    assert "fix it" in out.stdout
+    clean = subprocess.run(
+        [sys.executable, str(script)],
+        input='{"findings": [], "count": 0}',
+        capture_output=True, text=True, timeout=60)
+    assert clean.returncode == 0
+
+
+# ---------------------------------------------------------------------------
+# kernel_vmem column in the dry-run audit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dryrun_kernel_vmem_audit_catches_tampering(tmp_path):
+    """The committed records' kernel_vmem estimates must match a fresh
+    capture; a doctored peak or a dropped column is a finding."""
+    from repro.analysis.contract import dryrun_contract_findings
+    src = sorted(DRYRUN.glob("*.json"))[0]
+    rec = json.loads(src.read_text())
+    assert rec["kernel_vmem_ok"] is True
+    rec["kernel_vmem"]["gram"]["peak_bytes"] = 1
+    doctored = tmp_path / src.name
+    doctored.write_text(json.dumps(rec))
+    msgs = dryrun_contract_findings(doctored)
+    assert any("kernel_vmem" in m and "peak_bytes" in m for m in msgs), \
+        msgs
+
+    rec = json.loads(src.read_text())
+    del rec["kernel_vmem"]
+    doctored.write_text(json.dumps(rec))
+    msgs = dryrun_contract_findings(doctored)
+    assert any("missing kernel_vmem" in m for m in msgs), msgs

@@ -242,3 +242,120 @@ def test_topk_validation_errors():
         ops.topk_score(us, v, 0)
     with pytest.raises(ValueError, match="exclude shape"):
         ops.topk_score(us, v, 2, exclude=jnp.zeros((3, 10)))
+
+
+# -- pad_to_blocks: the ONE padding path -----------------------------------
+
+@pytest.mark.parametrize("shape,multiples,expect", [
+    ((13,), {0: 8}, (16,)),
+    ((13, 257), {0: 8, 1: 128}, (16, 384)),
+    ((8, 256), {0: 8, 1: 128}, (8, 256)),          # already aligned
+    ((3, 5, 7), {1: 4}, (3, 8, 7)),                # untouched axes keep
+    ((1, 1), {0: 16, 1: 16}, (16, 16)),
+    ((130,), {0: 1}, (130,)),                      # multiple 1 = no-op
+])
+def test_pad_to_blocks_shapes(shape, multiples, expect):
+    x = jnp.ones(shape, jnp.float32)
+    y = ops.pad_to_blocks(x, multiples)
+    assert y.shape == expect
+
+
+def test_pad_to_blocks_aligned_is_identity():
+    """The aligned fast path returns the SAME array — no pad op."""
+    x = jnp.ones((8, 256), jnp.float32)
+    assert ops.pad_to_blocks(x, {0: 8, 1: 128}) is x
+
+
+def test_pad_to_blocks_zero_fills_tail():
+    x = jnp.full((5, 3), 7.0)
+    y = ops.pad_to_blocks(x, {0: 4, 1: 4})
+    assert y.shape == (8, 4)
+    np.testing.assert_array_equal(np.asarray(y[:5, :3]), np.asarray(x))
+    assert float(jnp.sum(jnp.abs(y[5:, :]))) == 0.0
+    assert float(jnp.sum(jnp.abs(y[:, 3:]))) == 0.0
+
+
+def test_pad_to_blocks_rejects_bad_multiple():
+    with pytest.raises(ValueError, match="must be >= 1"):
+        ops.pad_to_blocks(jnp.ones((4,)), {0: 0})
+
+
+# -- flash attention vs the plain-softmax oracle ---------------------------
+
+def _flash_both(q, k, v, **kw):
+    from repro.kernels.flash import flash_fwd_pallas
+    a = ref.attention_ref(q, k, v, **kw)
+    b = flash_fwd_pallas(q, k, v, interpret=True, **kw)
+    return a, b
+
+
+@pytest.mark.parametrize("B,S,H,KVH,hd", [
+    (1, 8, 1, 1, 4), (2, 64, 4, 2, 16), (1, 128, 8, 2, 32),
+    (2, 32, 6, 3, 8),
+])
+def test_flash_causal_matches_attention_ref(B, S, H, KVH, hd):
+    """Interpret-mode parity vs the materialized-score oracle: causal
+    masking over MHA and GQA layouts (oracle-parity pattern, same as
+    the topk tests above)."""
+    key = jax.random.PRNGKey(B * 100 + S + H)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(k2, (B, S, KVH, hd), jnp.float32)
+    v = jax.random.normal(k3, (B, S, KVH, hd), jnp.float32)
+    a, b = _flash_both(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("window,q_offset", [
+    (16, 0), (32, 64), (8, 120), (128, 192),
+])
+def test_flash_windowed_matches_attention_ref(window, q_offset):
+    """Sliding-window decode: Sq < Sk with a query offset, so the
+    position arithmetic (qpos = q_offset + row) is what's under test."""
+    key = jax.random.PRNGKey(window + q_offset)
+    k1, k2, k3 = jax.random.split(key, 3)
+    B, Sq, Sk, H, KVH, hd = 2, 64, 256, 4, 2, 16
+    q = jax.random.normal(k1, (B, Sq, H, hd), jnp.float32)
+    k = jax.random.normal(k2, (B, Sk, KVH, hd), jnp.float32)
+    v = jax.random.normal(k3, (B, Sk, KVH, hd), jnp.float32)
+    a, b = _flash_both(q, k, v, causal=True, window=window,
+                       q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_noncausal_block_sweep_matches_attention_ref():
+    """Explicit block-size choices agree with the oracle (the same
+    discipline as test_gram_block_shapes)."""
+    key = jax.random.PRNGKey(21)
+    k1, k2, k3 = jax.random.split(key, 3)
+    B, S, H, KVH, hd = 1, 128, 2, 1, 8
+    q = jax.random.normal(k1, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(k2, (B, S, KVH, hd), jnp.float32)
+    v = jax.random.normal(k3, (B, S, KVH, hd), jnp.float32)
+    expect = ref.attention_ref(q, k, v, causal=False)
+    from repro.kernels.flash import flash_fwd_pallas
+    for bq, bk in [(32, 32), (64, 128), (128, 16)]:
+        out = flash_fwd_pallas(q, k, v, causal=False, block_q=bq,
+                               block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_flash_bf16_accumulates_f32():
+    """bf16 q/k/v: output dtype follows q, accuracy follows the f32
+    accumulation contract (close to the f32 oracle, not bf16-sloppy)."""
+    key = jax.random.PRNGKey(5)
+    k1, k2, k3 = jax.random.split(key, 3)
+    B, S, H, KVH, hd = 1, 64, 2, 2, 16
+    q = jax.random.normal(k1, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(k2, (B, S, KVH, hd), jnp.float32)
+    v = jax.random.normal(k3, (B, S, KVH, hd), jnp.float32)
+    f32 = ref.attention_ref(q, k, v, causal=True)
+    a, b = _flash_both(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                       v.astype(jnp.bfloat16), causal=True)
+    assert b.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(b, np.float32), np.asarray(f32),
+        rtol=0.05, atol=0.05)
