@@ -18,7 +18,17 @@ ring pipeline made exact:
                           that keeps e.g. the Macau FtF (D×D) product
                           hoisted out of the psum;
 * ``wire_dtype``        — exchange dtype on gather/permute wires
-                          (``bf16`` when ``ModelDef.bf16_gather``).
+                          (``bf16`` when ``ModelDef.bf16_gather``);
+* ``chains``            — chains swept PER SHARD GROUP per step call
+                          (``distributed.make_multi_chain_step`` maps
+                          the per-chain sweep with ``lax.map``): every
+                          count above is the total across those local
+                          chains, while per-op payloads are unchanged
+                          (each chain runs its own psums).  With a
+                          chain mesh axis the chains spread over it,
+                          so the local multiplier drops to
+                          ``C / axis_size`` and the row-shard count
+                          ``S`` shrinks to the per-chain shard group.
 
 :func:`contract_for` *derives* the contract from any ``ModelDef`` —
 no per-model pins — and the two checkers verify it against StableHLO
@@ -57,6 +67,8 @@ class CommContract:
     all_reduces: int            # hyper-moment + metric psums
     max_reduce_elems: int       # largest all-reduce payload (elems)
     wire_dtype: str             # "f32" | "bf16" on gather/permute
+    chains: int = 1             # local chains per shard group; the
+    #                             counts above are totals across them
 
     def asdict(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
@@ -85,16 +97,43 @@ def _prior_reduce_profile(prior) -> Tuple[int, int]:
 
 
 def contract_for(model, mesh_shape: Sequence[int],
-                 pipeline: Optional[str] = "eager") -> CommContract:
+                 pipeline: Optional[str] = "eager",
+                 chains: int = 1,
+                 chain_axis_size: Optional[int] = None) -> CommContract:
     """Derive the expected communication contract for one sweep of
     ``model`` sharded over ``mesh_shape`` under ``pipeline``.
 
     Pure arithmetic over the ModelDef — E entities, M blocks,
     S = prod(mesh_shape) shards — so it needs no devices and works
     for any model the builder can express.
+
+    ``chains=C`` (``make_multi_chain_step``): every shard sweeps its
+    local chains serially (``lax.map``), so collective COUNTS scale by
+    the local chain multiplier while per-op payloads stay fixed.
+    ``chain_axis_size`` declares that ``mesh_shape`` includes a chain
+    mesh axis of that size: rows then shard over only the remaining
+    ``S = prod(mesh_shape) / chain_axis_size`` devices and each shard
+    group sweeps ``C / chain_axis_size`` chains — how chains x shards
+    fills a pod without inflating the per-group census.
     """
     pipeline = resolve_pipeline(pipeline)
     n_shards = math.prod(mesh_shape)
+    chains = int(chains)
+    if chains < 1:
+        raise ValueError(f"chains must be >= 1, got {chains}")
+    if chain_axis_size is not None:
+        if n_shards % chain_axis_size:
+            raise ValueError(
+                f"chain_axis_size={chain_axis_size} does not divide "
+                f"the {n_shards}-device mesh {tuple(mesh_shape)}")
+        if chains % chain_axis_size:
+            raise ValueError(
+                f"chains={chains} does not divide over a chain axis "
+                f"of size {chain_axis_size}")
+        n_shards //= chain_axis_size
+        local = chains // chain_axis_size
+    else:
+        local = chains
     E, M = len(model.entities), len(model.blocks)
     ar, elems = 0, 0
     for ent in model.entities:
@@ -108,10 +147,11 @@ def contract_for(model, mesh_shape: Sequence[int],
     else:
         ag, cp = E, 0
     return CommContract(
-        pipeline=pipeline, n_shards=n_shards, all_gathers=ag,
-        collective_permutes=cp, all_reduces=ar,
+        pipeline=pipeline, n_shards=n_shards, all_gathers=ag * local,
+        collective_permutes=cp * local, all_reduces=ar * local,
         max_reduce_elems=elems,
-        wire_dtype="bf16" if model.bf16_gather else "f32")
+        wire_dtype="bf16" if model.bf16_gather else "f32",
+        chains=local)
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +164,12 @@ def check_lowered(contract: CommContract, text: str) -> List[str]:
     split yet.  Note: ring pipelines above ``RING_UNROLL_MAX`` shards
     lower to ``stablehlo.while`` loops; use :func:`check_compiled`
     (trip-count-aware) for those.
+
+    A multi-chain sweep (``contract.chains > 1``) ``lax.map``-rolls
+    the per-chain body into ONE ``stablehlo.while``, so the text holds
+    per-iteration counts — the contract's totals divided by the local
+    chain count (compiled HLO recovers the trip count and checks the
+    totals directly).
     """
     lines = text.splitlines()
     ag = [ln for ln in lines if "stablehlo.all_gather" in ln]
@@ -131,16 +177,22 @@ def check_lowered(contract: CommContract, text: str) -> List[str]:
     ar = sum(ln.count("stablehlo.all_reduce") for ln in lines)
     rolled_ring = (contract.pipeline == "ring"
                    and contract.n_shards > RING_UNROLL_MAX)
+    local = max(1, contract.chains)
     out: List[str] = []
-    if len(ag) != contract.all_gathers:
-        out.append(f"stablehlo: {len(ag)} all-gathers, contract says "
-                   f"{contract.all_gathers}")
-    if not rolled_ring and len(cp) != contract.collective_permutes:
-        out.append(f"stablehlo: {len(cp)} collective-permutes, "
-                   f"contract says {contract.collective_permutes}")
-    if ar != contract.all_reduces:
-        out.append(f"stablehlo: {ar} all-reduces, contract says "
-                   f"{contract.all_reduces}")
+    if len(ag) * local != contract.all_gathers:
+        out.append(f"stablehlo: {len(ag)} all-gathers per chain "
+                   f"iteration, contract says "
+                   f"{contract.all_gathers} across {local} chain(s)")
+    if not rolled_ring and len(cp) * local \
+            != contract.collective_permutes:
+        out.append(f"stablehlo: {len(cp)} collective-permutes per "
+                   f"chain iteration, contract says "
+                   f"{contract.collective_permutes} across {local} "
+                   "chain(s)")
+    if ar * local != contract.all_reduces:
+        out.append(f"stablehlo: {ar} all-reduces per chain iteration, "
+                   f"contract says {contract.all_reduces} across "
+                   f"{local} chain(s)")
     want_bf16 = contract.wire_dtype == "bf16"
     for ln in ag + cp:
         if ("bf16" in ln) != want_bf16:
@@ -284,9 +336,13 @@ def dryrun_contract_findings(json_path) -> List[str]:
                 f"{', '.join(sorted(CELLS))}"]
     model = build_model(CELLS[name], rec.get("variant", "baseline"))
     mesh_shape = tuple(int(x) for x in rec["mesh"].split("x"))
-    derived = contract_for(model, mesh_shape,
-                           rec.get("pipeline", "eager")).asdict()
-    stored = rec["contract"]
+    derived = contract_for(
+        model, mesh_shape, rec.get("pipeline", "eager"),
+        chains=rec.get("chains", 1),
+        chain_axis_size=rec.get("chain_axis_size")).asdict()
+    # records written before the multi-chain column default to one
+    # chain per shard group
+    stored = {"chains": 1, **rec["contract"]}
     for k, v in derived.items():
         if stored.get(k) != v:
             out.append(f"{p}: contract[{k!r}] = {stored.get(k)!r} "

@@ -107,6 +107,22 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def _raise_pending(self) -> None:
+        """Re-raise an exception captured on the saver thread.
+
+        A disk-full / permission error during a background save must
+        not be silently lost (the sample store would be incomplete and
+        nobody would know) — it surfaces from the NEXT ``save()`` or
+        ``wait()`` on the training thread.  The pending error is
+        cleared on raise so a handled failure doesn't re-raise forever.
+        """
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"background checkpoint save into {self.dir!r} failed: "
+                f"{err!r}") from err
 
     def _gc(self) -> None:
         if self.keep is None:
@@ -131,13 +147,20 @@ class CheckpointManager:
         if blocking:
             work()
         else:
-            self._thread = threading.Thread(target=work, daemon=True)
+            def guarded():
+                try:
+                    work()
+                except BaseException as e:  # noqa: BLE001 — must not die silently
+                    self._error = e
+
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
 
     def restore_latest(self, template: Any):
         """(step, tree) of the newest complete checkpoint, or None."""
@@ -147,6 +170,14 @@ class CheckpointManager:
             return None
         return step, load_pytree(template,
                                  os.path.join(self.dir, f"step_{step}"))
+
+    def restore_step(self, template: Any, step: int) -> Any:
+        """Load one specific saved step (multi-chain resume restores
+        every chain at the HIGHEST COMMON step, not each chain's own
+        latest — an interrupted run may have chains one save apart)."""
+        self.wait()
+        return load_pytree(template,
+                           os.path.join(self.dir, f"step_{step}"))
 
     def all_steps(self) -> List[int]:
         return list_steps(self.dir)

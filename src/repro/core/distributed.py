@@ -165,6 +165,28 @@ def state_specs(model: ModelDef, mesh: Mesh, state: MFState) -> MFState:
     return MFState(P(), factors, hypers, noises, P())
 
 
+def stacked_state_specs(model: ModelDef, mesh: Mesh, stacked: MFState,
+                        chain_axis: Optional[str] = None) -> MFState:
+    """PartitionSpec pytree for a chain-stacked ``(C, ...)`` MFState.
+
+    The leading chain dim shards over ``chain_axis`` when given (chains
+    x shards fills the mesh) and replicates otherwise; factor ROWS (now
+    axis 1) shard over the FACTOR_AXES exactly as in ``state_specs``.
+    """
+    ca = chain_axis
+
+    def fit_rows(x):
+        if hasattr(x, "ndim") and x.ndim >= 2 \
+                and x.shape[1] % _n_shards(mesh) == 0:
+            return P(ca, _axes_in(mesh))
+        return P(ca)
+
+    factors = tuple(fit_rows(f) for f in stacked.factors)
+    hypers = jax.tree.map(lambda x: P(ca), stacked.hypers)
+    noises = jax.tree.map(lambda x: P(ca), stacked.noises)
+    return MFState(P(ca), factors, hypers, noises, P(ca))
+
+
 def data_specs(model: ModelDef, mesh: Mesh, data: MFData) -> MFData:
     """Both padded orientations row-sharded; COO and sides likewise.
 
@@ -627,6 +649,95 @@ def _macau_ftf(model: ModelDef, data: MFData):
             side = jnp.asarray(side, jnp.float32)
             out.append(side.T @ side)
     return tuple(out)
+
+
+def _validate_chain_axis(mesh: Mesh, chains: int,
+                         chain_axis: Optional[str]) -> None:
+    if chain_axis is None:
+        return
+    if chain_axis in FACTOR_AXES:
+        raise ValueError(
+            f"chain_axis {chain_axis!r} collides with the row-sharding "
+            f"axes {FACTOR_AXES}; name the chain mesh axis something "
+            "else (conventionally 'chain')")
+    if chain_axis not in mesh.axis_names:
+        raise ValueError(
+            f"chain_axis {chain_axis!r} is not a mesh axis; this mesh "
+            f"has {tuple(mesh.axis_names)}")
+    size = mesh.shape[chain_axis]
+    if chains % size != 0:
+        raise ValueError(
+            f"chains={chains} does not divide over chain_axis "
+            f"{chain_axis!r} of size {size}")
+
+
+def make_multi_chain_step(model: ModelDef, mesh: Mesh, data: MFData,
+                          stacked: MFState,
+                          pipeline: Optional[str] = None,
+                          chains: int = 1,
+                          chain_axis: Optional[str] = None):
+    """The distributed sweep over a chain-stacked ``(C, ...)`` state.
+
+    Chains map over the leading axis with ``lax.map`` INSIDE the
+    shard_map body — each chain runs the identical ``_sharded_sweep``
+    subgraph, so chain c of the multi-chain program is bitwise the
+    single-chain distributed run keyed with ``chain_keys(seed, C)[c]``
+    (vmap would batch the per-chain reductions and drift ~1e-6).
+
+    With ``chain_axis`` the stacked state shards its chain dim over
+    that mesh axis and rows over the remaining FACTOR_AXES — chains x
+    shards fills the pod, each device sweeps ``C / mesh.shape[chain_
+    axis]`` local chains, and the per-sweep collective census equals
+    the single-chain census on the smaller per-chain shard group
+    (``contract_for(..., chains=C, chain_axis_size=...)`` derives it).
+    Without ``chain_axis`` every shard sweeps all C chains serially and
+    the census scales by C.
+
+    Returns (step_fn, placed_data_shardings, stacked_state_shardings);
+    metrics come back stacked ``(C,)`` per quantity.
+    """
+    pipeline = resolve_pipeline(pipeline)
+    _validate_chain_axis(mesh, chains, chain_axis)
+    sss = stacked_state_specs(model, mesh, stacked, chain_axis)
+    ss = _with_mesh(mesh, sss)
+    ds = data_shardings(model, mesh, data)
+    mspec = P(chain_axis)
+    if distributed_supported(model, mesh, data):
+        axes = _axes_in(mesh)
+        sizes = compat.mesh_axis_sizes(mesh, axes)
+        ftf = _macau_ftf(model, data)
+        ftf_specs = jax.tree.map(lambda x: P(), ftf)
+
+        def sweep_chains(ftf_, data_, stacked_):
+            return jax.lax.map(
+                lambda st: _sharded_sweep(model, axes, sizes, pipeline,
+                                          ftf_, data_, st),
+                stacked_)
+
+        body = compat.shard_map(
+            sweep_chains,
+            mesh=mesh,
+            in_specs=(ftf_specs,
+                      data_specs(model, mesh, data),
+                      sss),
+            out_specs=(sss, mspec),
+            check=False)
+        jfn = jax.jit(body,
+                      in_shardings=(_with_mesh(mesh, ftf_specs), ds, ss),
+                      out_shardings=(ss, NamedSharding(mesh, mspec)))
+
+        def fn(data, state):
+            return jfn(ftf, data, state)
+
+        fn.lower = lambda data, state: jfn.lower(ftf, data, state)
+    else:
+        fn = jax.jit(
+            lambda data_, stacked_: jax.lax.map(
+                lambda st: gibbs_step(model, data_, st), stacked_),
+            in_shardings=(ds, ss),
+            out_shardings=(ss, NamedSharding(mesh, mspec)),
+        )
+    return fn, ds, ss
 
 
 def make_distributed_step(model: ModelDef, mesh: Mesh, data: MFData,

@@ -51,14 +51,21 @@ class MFData(NamedTuple):
 
 
 def init_state(model: ModelDef, data: MFData, seed: int = 0,
-               init_scale: float = 1.0) -> MFState:
+               init_scale: float = 1.0,
+               key: Optional[jax.Array] = None) -> MFState:
     """Fresh chain state from the STATIC graph alone — ``data`` is
     accepted for signature symmetry but never read.  That contract is
     load-bearing: ``modelspec.state_template`` rebuilds checkpoint
     templates from a ``model.json`` spec with no data payloads, so any
     future data-dependent initialization must stay out of the state
-    *structure*."""
-    key = jax.random.PRNGKey(seed)
+    *structure*.
+
+    ``key`` overrides the ``PRNGKey(seed)`` derivation — the multi-chain
+    layer passes ``chain_keys(seed, C)[c]`` here so chain ``c`` of a
+    C-chain run is exactly the single-chain run seeded with that key.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(seed)
     keys = jax.random.split(key, len(model.entities) + 1)
     factors = []
     hypers = []
@@ -69,6 +76,60 @@ def init_state(model: ModelDef, data: MFData, seed: int = 0,
     noises = tuple(b.noise.init() for b in model.blocks)
     return MFState(keys[-1], tuple(factors), tuple(hypers), noises,
                    jnp.asarray(0, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# multi-chain helpers
+# ---------------------------------------------------------------------------
+
+def chain_keys(seed: int, chains: int):
+    """Per-chain root PRNG keys.
+
+    Chain 0 is ``PRNGKey(seed)`` — NOT folded — so chain 0 of any
+    C-chain run is bitwise the existing single-chain golden chain.
+    Chains 1..C-1 fold the chain index into the base key.
+    """
+    base = jax.random.PRNGKey(seed)
+    return [base if c == 0 else jax.random.fold_in(base, c)
+            for c in range(chains)]
+
+
+def init_chain_states(model: ModelDef, data: MFData, seed: int,
+                      chains: int, init_scale: float = 1.0):
+    """List of C independent fresh states (one per chain key)."""
+    return [init_state(model, data, seed, init_scale, key=k)
+            for k in chain_keys(seed, chains)]
+
+
+def stack_states(states) -> MFState:
+    """Stack per-chain states along a new leading chain axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_state(stacked: MFState, c: int) -> MFState:
+    """Slice chain ``c`` out of a stacked multi-chain state."""
+    return jax.tree_util.tree_map(lambda x: x[c], stacked)
+
+
+def multi_chain_step(model: ModelDef, data: MFData, stacked: MFState
+                     ) -> Tuple[MFState, Dict[str, jnp.ndarray]]:
+    """One Gibbs sweep of every chain in a stacked state.
+
+    Maps ``gibbs_step`` over the leading chain axis with ``lax.map``
+    rather than ``vmap``: vmap batches the per-chain ops into wider
+    kernels whose reductions tile differently, drifting ~1e-6 from the
+    single-chain program, while ``lax.map`` keeps each chain's subgraph
+    identical to ``gibbs_step`` — measured bitwise-equal to C
+    independent seeded runs.  Metrics come back stacked with a leading
+    ``(C,)`` axis.
+    """
+    return jax.lax.map(lambda st: gibbs_step(model, data, st), stacked)
+
+
+@partial(jax.jit, static_argnums=0)
+def multi_chain_step_jit(model: ModelDef, data: MFData, stacked: MFState):
+    """Jitted ``multi_chain_step`` (single-device multi-chain path)."""
+    return multi_chain_step(model, data, stacked)
 
 
 # ---------------------------------------------------------------------------
@@ -291,17 +352,31 @@ def _sample_sns_factor(model: ModelDef, data: MFData, key,
     rho, tau = hyper["rho"], hyper["tau"]
     k_incl, k_slab = jax.random.split(key)
 
-    for k in range(K):
+    # The K coordinate updates are a lax.scan, not a Python loop, so
+    # large-K GFA compiles one body instead of K copies (flat compile
+    # time; carried over from PR 3's TODO).  Kinds and the per-view
+    # constants (Fv, val, m, alpha) are loop-invariant closures; the
+    # carry is (u, per-view residual predictions).  Every indexed read
+    # (Fv[..., k], tau[k], rho[k]) and the per-component ``fold_in``
+    # take the traced k, which lowers to gathers/dynamic-slices with
+    # the same values as the unrolled loop — the golden GFA chains pin
+    # this bitwise.
+    kinds = tuple(v[0] for v in views)
+    consts = tuple((Fv, val, m, alpha)
+                   for _, Fv, val, m, _, alpha in views)
+    preds0 = tuple(v[4] for v in views)
+
+    def body(carry, k):
+        u, preds = carry
         q = tau[k]
         l = jnp.zeros((u.shape[0],), jnp.float32)
         new_preds = []
-        for kind, Fv, val, m, pred, alpha in views:
+        for kind, (Fv, val, m, alpha), pred in zip(kinds, consts, preds):
             if kind == "sp":
                 fk = Fv[:, :, k]                        # (R,T)
                 pred_mk = pred - u[:, k][:, None] * fk
                 q = q + alpha * jnp.sum(fk * fk * m, axis=-1)
                 l = l + alpha * jnp.sum((val - pred_mk) * m * fk, axis=-1)
-                new_preds.append(pred_mk)
             elif kind == "df":
                 fk = Fv[:, k]                           # (C,)
                 pred_mk = pred - jnp.outer(u[:, k], fk)
@@ -311,14 +386,13 @@ def _sample_sns_factor(model: ModelDef, data: MFData, key,
                 # O(rows x cols) matvec per component per view
                 q = q + alpha * jnp.sum(fk * fk)
                 l = l + alpha * ((val - pred_mk) @ fk)
-                new_preds.append(pred_mk)
             else:
                 fk = Fv[:, k]                           # (C,)
                 pred_mk = pred - jnp.outer(u[:, k], fk)
                 # masked: sum_c m_rc fk_c^2  (per row)
                 q = q + alpha * (m @ (fk * fk))
                 l = l + alpha * (((val - pred_mk) * m) @ fk)
-                new_preds.append(pred_mk)
+            new_preds.append(pred_mk)
 
         mu = l / q
         log_odds = (jnp.log(rho[k]) - jnp.log1p(-rho[k])
@@ -333,13 +407,14 @@ def _sample_sns_factor(model: ModelDef, data: MFData, key,
         u = u.at[:, k].set(u_k)
 
         # restore preds with the new component folded back in
-        views = [
-            (kind, Fv, val, m,
-             (pred_mk + (u_k[:, None] * Fv[:, :, k] if kind == "sp"
-                         else jnp.outer(u_k, Fv[:, k]))), alpha)
-            for (kind, Fv, val, m, _, alpha), pred_mk in
-            zip(views, new_preds)
-        ]
+        restored = tuple(
+            pred_mk + (u_k[:, None] * Fv[:, :, k] if kind == "sp"
+                       else jnp.outer(u_k, Fv[:, k]))
+            for kind, (Fv, _, _, _), pred_mk in
+            zip(kinds, consts, new_preds))
+        return (u, restored), None
+
+    (u, _), _ = jax.lax.scan(body, (u, preds0), jnp.arange(K))
     return u
 
 

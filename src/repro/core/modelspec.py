@@ -36,6 +36,23 @@ from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
 
 MODEL_SPEC_FILE = "model.json"
 SAMPLES_SUBDIR = "samples"
+# multi-chain stores nest one full single-chain store per chain:
+# save_dir/chain_<c>/{model.json, samples/}; the top-level model.json's
+# run.chains announces the layout (see Session._make_savers)
+CHAIN_SUBDIR_PREFIX = "chain_"
+
+
+def chain_subdir(c: int) -> str:
+    return f"{CHAIN_SUBDIR_PREFIX}{int(c)}"
+
+
+def chain_count_on_disk(save_dir: str) -> int:
+    """Number of ``chain_<c>`` stores under ``save_dir`` (0 = legacy
+    single-chain layout).  Requires a contiguous 0..C-1 run."""
+    c = 0
+    while os.path.isdir(os.path.join(save_dir, chain_subdir(c))):
+        c += 1
+    return c
 
 PRIOR_TYPES = {cls.__name__: cls for cls in
                (NormalPrior, FixedNormalPrior, MacauPrior,

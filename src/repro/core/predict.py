@@ -246,57 +246,140 @@ class PredictSession:
     bigger than the budget keep the original lazy one-sample-at-a-time
     streaming (the store can be much bigger than memory), trading
     per-request reloads for residency.
+
+    **Multi-chain stores + the convergence gate.**  A session run with
+    ``chains=C > 1`` writes one single-chain store per chain under
+    ``save_dir/chain_<c>/``; this class detects the layout and POOLS
+    the samples of every chain (step-major, chain-minor — the exact
+    summation order of the in-session accumulator, so a reload still
+    reproduces the in-session ``rmse_test``).  ``num_samples`` counts
+    pooled samples; ``load_sample(step, chain=...)`` addresses one.
+    The training run also records split-R-hat / bulk-ESS per monitored
+    quantity in ``save_dir/diagnostics.json`` (``core.diagnostics``);
+    ``require_converged=True`` REFUSES to serve a store whose recorded
+    R-hat exceeds ``rhat_threshold`` (or that has no recorded
+    diagnostics at all), naming the offending quantities —
+    ``require_converged="warn"`` warns instead of raising.  Production
+    Bayesian serving should gate: averaging the samples of unmixed
+    chains silently serves the wrong posterior.
     """
 
     def __init__(self, save_dir: str,
-                 cache_bytes: Optional[int] = None):
+                 cache_bytes: Optional[int] = None,
+                 require_converged: Union[bool, str] = False,
+                 rhat_threshold: Optional[float] = None):
         from ..checkpoint.ckpt import list_steps
+        from .diagnostics import load_diagnostics
         from .modelspec import (MODEL_SPEC_FILE, SAMPLES_SUBDIR,
+                                chain_count_on_disk, chain_subdir,
                                 spec_to_model, state_template)
         self.dir = save_dir
         self.spec = _load_spec_cached(os.path.join(save_dir,
                                                    MODEL_SPEC_FILE))
         self.model = spec_to_model(self.spec)
         self._template = state_template(self.model)
-        self._samples_dir = os.path.join(save_dir, SAMPLES_SUBDIR)
-        self.steps: List[int] = list_steps(self._samples_dir)
-        if not self.steps:
+        chains_on_disk = chain_count_on_disk(save_dir)
+        self.n_chains = max(1, chains_on_disk)
+        if chains_on_disk == 0:
+            self._sample_dirs = [os.path.join(save_dir, SAMPLES_SUBDIR)]
+        else:
+            self._sample_dirs = [
+                os.path.join(save_dir, chain_subdir(c), SAMPLES_SUBDIR)
+                for c in range(chains_on_disk)]
+        self._samples_dir = self._sample_dirs[0]
+        per_chain = [list_steps(d) for d in self._sample_dirs]
+        # pooled (step, chain) ids, step-major chain-minor — the
+        # in-session accumulation order
+        self.chain_steps: List[Tuple[int, int]] = sorted(
+            (s, c) for c, steps in enumerate(per_chain) for s in steps)
+        self.steps: List[int] = sorted({s for s, _ in self.chain_steps})
+        if not self.chain_steps:
             raise ValueError(
                 f"no complete samples under {self._samples_dir}; run "
                 "the session with save_freq > 0 (and let at least one "
                 "post-burnin sweep finish)")
+        self._step_sets = [frozenset(s) for s in per_chain]
         self._step_set = frozenset(self.steps)   # O(1) membership
         self.cache_bytes = _resolve_cache_bytes(cache_bytes)
         self.load_count = 0          # checkpoint loads, ever
         self._cache: Optional[PosteriorCache] = None
+        self.diagnostics = load_diagnostics(save_dir)
+        if require_converged:
+            self._check_converged(require_converged, rhat_threshold)
+
+    def _check_converged(self, mode: Union[bool, str],
+                         rhat_threshold: Optional[float]) -> None:
+        from .diagnostics import DEFAULT_RHAT_THRESHOLD
+        threshold = (DEFAULT_RHAT_THRESHOLD if rhat_threshold is None
+                     else float(rhat_threshold))
+        if self.diagnostics is None:
+            msg = (
+                f"require_converged: store {self.dir!r} records no "
+                "diagnostics.json — it predates convergence recording "
+                "or the training run died before finishing; rerun the "
+                "session (ideally chains>=2) to record split-R-hat/"
+                "bulk-ESS, or serve explicitly ungated with "
+                "require_converged=False")
+        else:
+            failing = self.diagnostics.failing(threshold)
+            if not failing:
+                return
+            worst = ", ".join(f"{k}={v:.4g}"
+                              for k, v in sorted(failing.items()))
+            msg = (
+                f"require_converged: store {self.dir!r} has NOT "
+                f"converged — split-R-hat over "
+                f"{self.diagnostics.n_chains} chain(s) x "
+                f"{self.diagnostics.n_draws} draws exceeds "
+                f"{threshold:g} for: {worst}. Run more sweeps/chains, "
+                "raise rhat_threshold deliberately, or serve "
+                "explicitly ungated with require_converged=False")
+        if mode == "warn":
+            import warnings
+            warnings.warn(msg, stacklevel=3)
+        else:
+            raise ValueError(msg)
 
     # -- sample access -----------------------------------------------------
 
     @property
     def num_samples(self) -> int:
-        return len(self.steps)
+        """Pooled sample count — across ALL chains for a multi-chain
+        store."""
+        return len(self.chain_steps)
 
-    def load_sample(self, step: int):
-        """The full sampled ``MFState`` saved at global sweep ``step``."""
+    def load_sample(self, step: int, chain: int = 0):
+        """The full sampled ``MFState`` saved at global sweep ``step``
+        (of ``chain``, for a multi-chain store)."""
         from ..checkpoint.ckpt import load_pytree
-        if step not in self._step_set:
+        if not 0 <= chain < self.n_chains:
             raise ValueError(
-                f"no sample at step {step}; saved steps: "
-                f"{', '.join(map(str, self.steps))}")
+                f"no chain {chain}; this store holds "
+                f"{self.n_chains} chain(s)")
+        if step not in self._step_sets[chain]:
+            saved = ", ".join(map(str, sorted(self._step_sets[chain])))
+            raise ValueError(
+                f"no sample at step {step}"
+                + (f" for chain {chain}" if self.n_chains > 1 else "")
+                + f"; saved steps: {saved}")
         self.load_count += 1
         return load_pytree(self._template,
-                           os.path.join(self._samples_dir,
+                           os.path.join(self._sample_dirs[chain],
                                         f"step_{step}"))
 
     def samples(self) -> Iterator:
-        """Lazily yield every sampled state, in chain order."""
-        for s in self.steps:
-            yield self.load_sample(s)
+        """Lazily yield every sampled state — in chain order, and for
+        multi-chain stores pooled step-major chain-minor (the
+        in-session accumulation order)."""
+        for s, c in self.chain_steps:
+            yield self.load_sample(s, c)
 
     def restore_latest(self) -> Tuple[int, object]:
-        """(step, MFState) of the newest sample — the resume point."""
-        last = self.steps[-1]
-        return last, self.load_sample(last)
+        """(step, MFState) of the newest sample — the resume point.
+        For a multi-chain store this is CHAIN 0's newest sample
+        (``Session.run(resume=True)`` restores every chain itself)."""
+        last = max(self._step_sets[0])
+        return last, self.load_sample(last, 0)
 
     # -- resident posterior cache ------------------------------------------
 
@@ -706,9 +789,13 @@ class PredictSession:
             raise ValueError(
                 "pass user= (warm row ids) and/or features= "
                 "(cold-start side info)")
-        if exclude is not None and n_q == 1 and len(exclude) \
-                and np.isscalar(exclude[0]):
-            exclude = [exclude]
+        if exclude is not None and n_q == 1:
+            # single-query convenience: accept a flat id list — and an
+            # EMPTY one ("nothing to exclude"), which must normalize to
+            # one empty per-query sequence, not zero sequences
+            ex = list(exclude)
+            if not ex or np.ndim(ex[0]) == 0:
+                exclude = [ex]
         rows = parts[0] if len(parts) == 1 else \
             jnp.concatenate(parts, axis=0)
         return self.recommend_rows(rows, k, block, exclude)

@@ -53,7 +53,11 @@ import numpy as np
 
 from .blocks import (BlockDef, DenseBlock, EntityDef, ModelDef,
                      dense_block)
-from .gibbs import MFData, MFState, gibbs_step, init_state
+from .diagnostics import (Diagnostics, compute_diagnostics,
+                          save_diagnostics)
+from .gibbs import (MFData, MFState, gibbs_step, init_chain_states,
+                    init_state, multi_chain_step_jit, stack_states,
+                    unstack_state)
 from .noise import AdaptiveGaussian, FixedGaussian, ProbitNoise
 from .predict import PredictAccumulator, TestSet, make_test_set
 from .priors import (FixedNormalPrior, MacauPrior, NormalPrior,
@@ -81,10 +85,27 @@ class BlockResult:
 
 @dataclasses.dataclass
 class SessionResult:
-    """Result of one chain.  The scalar fields mirror the first block
-    carrying a test set (block 0's train trace for back-compat);
-    ``blocks`` holds every block's traces and metrics for
-    multi-relation models."""
+    """Result of one run (one chain, or ``chains=C`` stacked chains).
+
+    The scalar fields mirror the first block carrying a test set
+    (block 0's train trace for back-compat); ``blocks`` holds every
+    block's traces and metrics for multi-relation models.  With
+    ``chains=C > 1``:
+
+    * test metrics / ``predictions`` pool the posterior draws of ALL
+      chains (step-major, chain-minor summation order — the same order
+      ``PredictSession`` replays from a multi-chain store);
+    * ``blocks``' train traces follow chain 0; ``chain_blocks[c]``
+      carries every chain's per-block traces;
+    * ``state`` and ``factor_means`` entries gain a leading ``(C,)``
+      chain axis;
+    * ``diagnostics`` holds split-R-hat / bulk-ESS per monitored
+      quantity (``core.diagnostics``), also written to
+      ``save_dir/diagnostics.json`` when streaming samples;
+    * ``resumed_from`` records the completed-sweep count a
+      ``run(resume=True)`` continued from (``None`` for a fresh run) —
+      traces and accumulators cover only post-resume sweeps.
+    """
 
     rmse_test: Optional[float]
     auc_test: Optional[float]
@@ -99,6 +120,10 @@ class SessionResult:
     blocks: List[BlockResult] = dataclasses.field(default_factory=list)
     factor_means: Optional[List[np.ndarray]] = None
     save_dir: Optional[str] = None
+    n_chains: int = 1
+    chain_blocks: Optional[List[List[BlockResult]]] = None
+    diagnostics: Optional[Diagnostics] = None
+    resumed_from: Optional[int] = None
 
     def mean_from_samples(self, test: TestSet, row_entity: int = 0,
                           col_entity: int = 1) -> np.ndarray:
@@ -122,16 +147,36 @@ class SessionResult:
 
 
 class SweepInfo(NamedTuple):
-    """What a per-sweep callback sees (after the sweep completed)."""
+    """What a per-sweep callback sees (after the sweep completed).
+
+    ``metrics`` are always chain-0 SCALARS (existing single-chain
+    callbacks keep working under ``chains=C``); a multi-chain run
+    additionally exposes the full stacked ``(C,)`` metrics as
+    ``chain_metrics`` (``None`` when ``chains == 1``).  ``state`` is
+    the full post-sweep state — chain-stacked for a multi-chain run.
+    """
 
     sweep: int          # 0-based global sweep index
     phase: str          # "burnin" | "sample"
     state: MFState      # post-sweep sampler state (device arrays)
     metrics: Dict[str, jnp.ndarray]   # rmse_train_<b> / alpha_<b>
+    chain_metrics: Optional[Dict[str, jnp.ndarray]] = None
 
 
 _PRIORS = {"normal": NormalPrior, "spikeandslab": SpikeAndSlabPrior,
            "fixednormal": FixedNormalPrior}
+
+
+def resolve_chains(chains: Optional[int] = None) -> int:
+    """Validate the chain-count knob, defaulting from the
+    ``REPRO_CHAINS`` environment variable (CI runs a chains=4 smoke
+    leg that way), else 1."""
+    if chains is None:
+        chains = int(os.environ.get("REPRO_CHAINS", "1"))
+    chains = int(chains)
+    if chains < 1:
+        raise ValueError(f"chains must be >= 1, got {chains}")
+    return chains
 
 
 def _prior_by_name(name: str, num_latent: int):
@@ -180,6 +225,43 @@ def _place_step(model: ModelDef, data: MFData, state: MFState,
     step, ds, ss = make_distributed_step(model, mesh, data, state,
                                          pipeline=pipeline)
     return jax.device_put(data, ds), jax.device_put(state, ss), step
+
+
+def _place_multi_step(model: ModelDef, data: MFData, stacked: MFState,
+                      mesh: Any, pipeline: Optional[str],
+                      chains: int, chain_axis: Optional[str]):
+    """``_place_step`` for a chain-stacked state (``chains > 1``).
+
+    Single-device: ``lax.map`` of ``gibbs_step`` over the chain axis
+    (bitwise-identical per-chain subgraphs — see
+    ``gibbs.multi_chain_step``).  With a mesh: the chain-stacked
+    shard_map sweep (``distributed.make_multi_chain_step``), sharding
+    chains over ``chain_axis`` when given.
+    """
+    from .distributed import (distributed_unsupported_reason,
+                              make_multi_chain_step, resolve_pipeline)
+    resolve_pipeline(pipeline)
+    if mesh is None:
+        if pipeline is not None:
+            import warnings
+            warnings.warn(
+                f"pipeline={pipeline!r} has no effect without mesh=: "
+                "the session runs the single-device sweep",
+                stacklevel=3)
+        return data, stacked, (
+            lambda d, s: multi_chain_step_jit(model, d, s))
+    reason = distributed_unsupported_reason(model, mesh, data)
+    if reason is not None:
+        import warnings
+        warnings.warn(
+            f"model is outside the sharded subset on this mesh "
+            f"({reason}); falling back to auto-partitioned pjit",
+            stacklevel=3)
+    step, ds, ss = make_multi_chain_step(model, mesh, data, stacked,
+                                         pipeline=pipeline,
+                                         chains=chains,
+                                         chain_axis=chain_axis)
+    return jax.device_put(data, ds), jax.device_put(stacked, ss), step
 
 
 # ---------------------------------------------------------------------------
@@ -371,6 +453,19 @@ class Session:
       the on-disk layout :class:`~repro.core.predict.PredictSession`
       reloads; ``run(resume=True)`` continues an interrupted chain
       from the last complete sample on disk.
+    * ``chains=C`` runs C independent Gibbs chains in ONE compiled
+      program (``lax.map`` over a leading chain axis — bitwise equal
+      to C separate runs keyed ``gibbs.chain_keys(seed, C)``; chain 0
+      IS the single-chain run for the same seed).  ``None`` defers to
+      the ``REPRO_CHAINS`` environment variable.  Test metrics pool
+      the chains' posterior draws; split-R-hat / bulk-ESS over the
+      per-chain traces land in ``SessionResult.diagnostics`` and — when
+      streaming — in ``save_dir/diagnostics.json``, which
+      ``PredictSession(require_converged=True)`` gates on.  Samples
+      stream per chain under ``save_dir/chain_<c>/`` (each a valid
+      single-chain store).  ``chain_axis=`` names a mesh axis to shard
+      the chains over, so chains x row-shards fills a pod
+      (``Mesh(devices.reshape(C, -1), ("chain", "data"))``).
     * ``callbacks`` are called after every sweep with a
       :class:`SweepInfo` (trace collection, convergence monitors,
       extra checkpointing ...).
@@ -380,6 +475,8 @@ class Session:
                  tests: Optional[Dict[int, TestSet]] = None,
                  burnin: int = 100, nsamples: int = 100, seed: int = 0,
                  mesh: Any = None, pipeline: Optional[str] = None,
+                 chains: Optional[int] = None,
+                 chain_axis: Optional[str] = None,
                  save_freq: int = 0, save_dir: Optional[str] = None,
                  verbose: int = 0,
                  callbacks: Sequence[Callable[[SweepInfo], None]] = (),
@@ -399,6 +496,12 @@ class Session:
         self.seed = seed
         self.mesh = mesh
         self.pipeline = pipeline
+        self.chains = resolve_chains(chains)
+        self.chain_axis = chain_axis
+        if chain_axis is not None and mesh is None:
+            raise ValueError(
+                f"chain_axis={chain_axis!r} shards chains over a mesh "
+                "axis; pass mesh= too")
         self.save_freq = save_freq
         self.save_dir = save_dir
         self.verbose = verbose
@@ -412,44 +515,108 @@ class Session:
 
     # -- persistence -------------------------------------------------------
 
-    def _make_saver(self):
-        from ..checkpoint import CheckpointManager
-        from .modelspec import (MODEL_SPEC_FILE, SAMPLES_SUBDIR,
-                                model_to_spec, save_model_spec)
-        os.makedirs(self.save_dir, exist_ok=True)
+    def _run_spec(self, chain: Optional[int] = None) -> dict:
+        run = {"burnin": self.burnin, "nsamples": self.nsamples,
+               "save_freq": self.save_freq, "seed": self.seed,
+               "chains": self.chains}
+        if chain is not None:
+            run["chain"] = chain
+        return run
+
+    def _spec_at(self, directory: str, chain: Optional[int] = None):
+        from .modelspec import (MODEL_SPEC_FILE, model_to_spec,
+                                save_model_spec)
+        os.makedirs(directory, exist_ok=True)
         spec = model_to_spec(self.model)
-        spec["run"] = {"burnin": self.burnin, "nsamples": self.nsamples,
-                       "save_freq": self.save_freq, "seed": self.seed}
-        save_model_spec(os.path.join(self.save_dir, MODEL_SPEC_FILE),
-                        spec)
-        # keep=None: a posterior-sample store retains EVERY step
-        return CheckpointManager(
-            os.path.join(self.save_dir, SAMPLES_SUBDIR), keep=None)
+        spec["run"] = self._run_spec(chain)
+        save_model_spec(os.path.join(directory, MODEL_SPEC_FILE), spec)
+
+    def _make_savers(self):
+        """One CheckpointManager per chain.
+
+        ``chains == 1`` keeps the PR 5 layout exactly
+        (``save_dir/model.json`` + ``save_dir/samples/step_<s>/``).
+        ``chains = C > 1`` nests a full single-chain store per chain —
+        ``save_dir/chain_<c>/{model.json, samples/}`` — under a shared
+        top-level ``model.json`` whose ``run.chains`` announces the
+        layout to ``PredictSession``.
+        """
+        from ..checkpoint import CheckpointManager
+        from .modelspec import SAMPLES_SUBDIR, chain_subdir
+        self._spec_at(self.save_dir)
+        if self.chains == 1:
+            # keep=None: a posterior-sample store retains EVERY step
+            return [CheckpointManager(
+                os.path.join(self.save_dir, SAMPLES_SUBDIR), keep=None)]
+        savers = []
+        for c in range(self.chains):
+            cdir = os.path.join(self.save_dir, chain_subdir(c))
+            self._spec_at(cdir, chain=c)
+            savers.append(CheckpointManager(
+                os.path.join(cdir, SAMPLES_SUBDIR), keep=None))
+        return savers
+
+    def _restore(self, savers, state: MFState):
+        """(start, state) from the newest checkpoint every chain has.
+
+        Single chain: the latest complete step.  Multi-chain: the
+        HIGHEST COMMON step across chains (an interrupted run can leave
+        chains one save apart; ``keep=None`` retains every earlier
+        step, so the common step always exists on disk).  Returns None
+        when any chain store is empty.
+        """
+        if self.chains == 1:
+            return savers[0].restore_latest(state)
+        common = None
+        for sv in savers:
+            steps = set(sv.all_steps())
+            common = steps if common is None else (common & steps)
+        if not common:
+            return None
+        step = max(common)
+        chains = [sv.restore_step(unstack_state(state, c), step)
+                  for c, sv in enumerate(savers)]
+        return step, stack_states(chains)
 
     # -- run ---------------------------------------------------------------
 
     def run(self, keep_samples: bool = False,
             resume: bool = False) -> SessionResult:
         model, data = self.model, self.data
-        state = init_state(model, data, self.seed)
-        if self.init_transform is not None:
-            state = self.init_transform(state)
+        C = self.chains
+        if C == 1:
+            state = init_state(model, data, self.seed)
+            if self.init_transform is not None:
+                state = self.init_transform(state)
+        else:
+            chain_states = init_chain_states(model, data, self.seed, C)
+            if self.init_transform is not None:
+                chain_states = [self.init_transform(s)
+                                for s in chain_states]
+            state = stack_states(chain_states)
 
-        saver = None
+        savers = []
         start = 0
+        resumed_from: Optional[int] = None
         if self.save_freq:
-            saver = self._make_saver()
+            savers = self._make_savers()
             if resume:
-                restored = saver.restore_latest(state)
+                restored = self._restore(savers, state)
                 if restored is not None:
                     start, state = restored
+                    resumed_from = start
         elif resume:
             raise ValueError(
                 "resume=True needs save_freq > 0 and a save_dir "
                 "holding the interrupted chain's samples")
 
-        data, state, step = _place_step(model, data, state, self.mesh,
-                                        self.pipeline)
+        if C == 1:
+            data, state, step = _place_step(model, data, state,
+                                            self.mesh, self.pipeline)
+        else:
+            data, state, step = _place_multi_step(
+                model, data, state, self.mesh, self.pipeline, C,
+                self.chain_axis)
         accs = {bi: PredictAccumulator(ts)
                 for bi, ts in self.tests.items()}
         # wall-clock only reports runtime; samples are unaffected
@@ -457,51 +624,98 @@ class Session:
         t0 = time.perf_counter()
         n_blocks = len(model.blocks)
         train_traces: List[List[float]] = [[] for _ in range(n_blocks)]
+        chain_train_traces: List[List[List[float]]] = [
+            [[] for _ in range(n_blocks)] for _ in range(C)]
         test_traces: Dict[int, List[float]] = {bi: []
                                                for bi in self.tests}
         samples: List[Tuple[np.ndarray, ...]] = []
         sums = None
         if self.accumulate_factor_means:
-            sums = [jnp.zeros((e.n_rows, model.num_latent))
+            lead = () if C == 1 else (C,)
+            sums = [jnp.zeros(lead + (e.n_rows, model.num_latent))
                     for e in model.entities]
         n_acc = 0
+        # post-burnin traces of the monitored scalars, (C,) per sweep,
+        # feeding split-R-hat / bulk-ESS at the end of the run
+        diag_traces: Dict[str, List[np.ndarray]] = {}
 
         total = self.burnin + self.nsamples
         for sweep in range(start, total):
             state, metrics = step(data, state)
             for bi in range(n_blocks):
-                train_traces[bi].append(
-                    float(metrics[f"rmse_train_{bi}"]))
+                arr = np.atleast_1d(
+                    np.asarray(metrics[f"rmse_train_{bi}"]))
+                train_traces[bi].append(float(arr[0]))
+                for c in range(C):
+                    chain_train_traces[c][bi].append(float(arr[c]))
             in_sampling = sweep >= self.burnin
             if in_sampling:
+                # pool posterior draws across chains: step-major,
+                # chain-minor — the summation order PredictSession
+                # replays from a multi-chain store
                 for bi, acc in accs.items():
                     blk = model.blocks[bi]
-                    acc.update(state.factors[blk.row_entity],
-                               state.factors[blk.col_entity])
+                    if C == 1:
+                        acc.update(state.factors[blk.row_entity],
+                                   state.factors[blk.col_entity])
+                    else:
+                        for c in range(C):
+                            acc.update(
+                                state.factors[blk.row_entity][c],
+                                state.factors[blk.col_entity][c])
                     test_traces[bi].append(
                         float(jnp.sqrt(jnp.mean(
                             (acc.mean - acc.test.v) ** 2))))
                 if keep_samples:
-                    samples.append(tuple(np.asarray(f)
-                                         for f in state.factors))
+                    if C == 1:
+                        samples.append(tuple(np.asarray(f)
+                                             for f in state.factors))
+                    else:
+                        for c in range(C):
+                            samples.append(tuple(np.asarray(f[c])
+                                                 for f in state.factors))
                 if sums is not None:
                     sums = [s + f for s, f in zip(sums, state.factors)]
                     n_acc += 1
-                if saver is not None and \
+                for nm, v in metrics.items():
+                    diag_traces.setdefault(nm, []).append(
+                        np.atleast_1d(np.asarray(v, np.float64)))
+                for e, ent in enumerate(model.entities):
+                    f = state.factors[e]
+                    rms = jnp.sqrt(jnp.mean(
+                        f * f, axis=None if C == 1 else (1, 2)))
+                    diag_traces.setdefault(
+                        f"factor_rms_{ent.name}", []).append(
+                        np.atleast_1d(np.asarray(rms, np.float64)))
+                if savers and \
                         (sweep - self.burnin + 1) % self.save_freq == 0:
-                    saver.save(sweep + 1, state)
+                    if C == 1:
+                        savers[0].save(sweep + 1, state)
+                    else:
+                        for c, sv in enumerate(savers):
+                            sv.save(sweep + 1, unstack_state(state, c))
             if self.verbose and (sweep % max(1, total // 20) == 0):
                 ph = "burnin" if sweep < self.burnin else "sample"
                 print(f"[{ph} {sweep:4d}] rmse_train="
                       f"{train_traces[0][-1]:.4f}")
             if self.callbacks:
-                info = SweepInfo(
-                    sweep, "sample" if in_sampling else "burnin",
-                    state, metrics)
+                phase = "sample" if in_sampling else "burnin"
+                if C == 1:
+                    info = SweepInfo(sweep, phase, state, metrics)
+                else:
+                    m0 = {k: v[0] for k, v in metrics.items()}
+                    info = SweepInfo(sweep, phase, state, m0, metrics)
                 for cb in self.callbacks:
                     cb(info)
-        if saver is not None:
-            saver.wait()
+        for sv in savers:
+            sv.wait()
+
+        diag = None
+        if diag_traces:
+            diag = compute_diagnostics(
+                {k: np.stack(v, axis=1) for k, v in diag_traces.items()})
+            if savers:
+                save_diagnostics(self.save_dir, diag)
 
         # repro-lint: disable=nondeterminism-in-core
         runtime = time.perf_counter() - t0
@@ -527,8 +741,30 @@ class Session:
                 head = br
         if head is None:
             head = block_results[0]
+        chain_blocks = None
+        if C > 1:
+            chain_blocks = [
+                [BlockResult(
+                    block=bi,
+                    entities=(names[blk.row_entity],
+                              names[blk.col_entity]),
+                    rmse_train_trace=chain_train_traces[c][bi],
+                    rmse_test_trace=[], rmse_test=None, auc_test=None,
+                    predictions=None, pred_var=None)
+                 for bi, blk in enumerate(model.blocks)]
+                for c in range(C)]
         means = None
         if sums is not None:
+            if n_acc == 0 and self.nsamples > 0:
+                raise ValueError(
+                    f"run(resume=True) restored the chain at {start} "
+                    "completed sweeps — at or past the end of the "
+                    f"burnin={self.burnin} + nsamples={self.nsamples} "
+                    f"= {total} schedule — so ZERO posterior draws "
+                    "were accumulated and factor_means would be "
+                    "silently all-zero. The schedule counts TOTAL "
+                    "sweeps, not additional ones: raise nsamples to "
+                    "extend the chain, or rerun without resume=True.")
             means = [np.asarray(s / max(n_acc, 1)) for s in sums]
         return SessionResult(
             rmse_test=head.rmse_test,
@@ -544,6 +780,10 @@ class Session:
             blocks=block_results,
             factor_means=means,
             save_dir=self.save_dir,
+            n_chains=C,
+            chain_blocks=chain_blocks,
+            diagnostics=diag,
+            resumed_from=resumed_from,
         )
 
 
@@ -571,6 +811,8 @@ class TrainSession:
                  use_pallas: bool = False, verbose: int = 0,
                  save_freq: int = 0, save_dir: Optional[str] = None,
                  mesh: Any = None, pipeline: Optional[str] = None,
+                 chains: Optional[int] = None,
+                 chain_axis: Optional[str] = None,
                  callbacks: Sequence[Callable[[SweepInfo], None]] = ()):
         self.num_latent = num_latent
         self.burnin = burnin
@@ -584,13 +826,17 @@ class TrainSession:
         self.save_dir = save_dir
         self.mesh = mesh
         self.pipeline = pipeline
+        self.chains = chains
+        self.chain_axis = chain_axis
         self.callbacks = callbacks
         self._train: Optional[Any] = None
         self._test: Optional[TestSet] = None
         self._noise: Any = FixedGaussian(5.0)
         self._sides: List[Optional[np.ndarray]] = [None, None]
-        self._beta_precision = 5.0
-        self._sample_beta_precision = True
+        # per axis — a second add_side_info call must not clobber the
+        # first axis's precision knobs
+        self._beta_precisions: List[float] = [5.0, 5.0]
+        self._sample_beta_precisions: List[bool] = [True, True]
 
     # -- construction ------------------------------------------------------
 
@@ -608,10 +854,18 @@ class TrainSession:
     def add_side_info(self, axis: int, F: np.ndarray,
                       beta_precision: float = 5.0,
                       sample_beta_precision: bool = True):
-        """Attach side information to rows (axis=0) or cols (axis=1)."""
+        """Attach side information to rows (axis=0) or cols (axis=1).
+
+        ``beta_precision`` / ``sample_beta_precision`` are stored PER
+        AXIS — side info on both axes keeps each axis's own knobs.
+        """
+        if axis not in (0, 1):
+            raise ValueError(
+                f"unknown axis {axis!r}; valid axes: (0, 1) — 0 rows, "
+                "1 cols")
         self._sides[axis] = np.asarray(F, np.float32)
-        self._beta_precision = beta_precision
-        self._sample_beta_precision = sample_beta_precision
+        self._beta_precisions[axis] = beta_precision
+        self._sample_beta_precisions[axis] = sample_beta_precision
         return self
 
     # -- model assembly ----------------------------------------------------
@@ -626,8 +880,9 @@ class TrainSession:
             if side is not None:
                 b.add_entity(
                     name, n, side_info=side,
-                    beta_precision=self._beta_precision,
-                    sample_beta_precision=self._sample_beta_precision)
+                    beta_precision=self._beta_precisions[axis],
+                    sample_beta_precision=self._sample_beta_precisions[
+                        axis])
             else:
                 b.add_entity(name, n, prior=self.prior_names[axis])
         b.add_block("rows", "cols", self._train, noise=self._noise,
@@ -646,6 +901,7 @@ class TrainSession:
         sess = self._builder().session(
             burnin=self.burnin, nsamples=self.nsamples, seed=self.seed,
             mesh=self.mesh, pipeline=self.pipeline,
+            chains=self.chains, chain_axis=self.chain_axis,
             save_freq=self.save_freq, save_dir=self.save_dir,
             verbose=self.verbose, callbacks=self.callbacks)
         return sess.run(keep_samples=keep_samples, resume=resume)
@@ -675,6 +931,8 @@ class GFASession:
                  noise: Any = None, use_pallas: bool = False,
                  zero_init_loadings: bool = True, mesh: Any = None,
                  pipeline: Optional[str] = None,
+                 chains: Optional[int] = None,
+                 chain_axis: Optional[str] = None,
                  save_freq: int = 0, save_dir: Optional[str] = None,
                  callbacks: Sequence[Callable[[SweepInfo], None]] = ()):
         self.views = [np.asarray(v, np.float32) for v in views]
@@ -692,6 +950,8 @@ class GFASession:
         self.zero_init_loadings = zero_init_loadings
         self.mesh = mesh
         self.pipeline = pipeline
+        self.chains = chains
+        self.chain_axis = chain_axis
         self.save_freq = save_freq
         self.save_dir = save_dir
         self.callbacks = callbacks
@@ -722,38 +982,63 @@ class GFASession:
         sess = self._builder().session(
             burnin=self.burnin, nsamples=self.nsamples, seed=self.seed,
             mesh=self.mesh, pipeline=self.pipeline,
+            chains=self.chains, chain_axis=self.chain_axis,
             save_freq=self.save_freq, save_dir=self.save_dir,
             callbacks=self.callbacks,
             init_transform=(self._zero_loadings
                             if self.zero_init_loadings else None),
             accumulate_factor_means=True)
         r = sess.run(resume=resume)
-        return {
-            "Z": r.factor_means[0],
-            "W": r.factor_means[1:],
-            "Z_last": np.asarray(r.state.factors[0]),
-            "W_last": [np.asarray(f) for f in r.state.factors[1:]],
+        # Multi-chain: "Z"/"W" follow CHAIN 0 — GFA's rotation/sign
+        # indeterminacy makes pooling raw loadings across chains
+        # meaningless (chains converge to differently-rotated modes).
+        # The stacked per-chain means stay available as */_chains and
+        # r.diagnostics carries the cross-chain R-hat/ESS evidence.
+        if r.n_chains > 1:
+            out = {
+                "Z": r.factor_means[0][0],
+                "W": [m[0] for m in r.factor_means[1:]],
+                "Z_last": np.asarray(r.state.factors[0][0]),
+                "W_last": [np.asarray(f[0])
+                           for f in r.state.factors[1:]],
+                "Z_chains": r.factor_means[0],
+                "W_chains": r.factor_means[1:],
+            }
+        else:
+            out = {
+                "Z": r.factor_means[0],
+                "W": r.factor_means[1:],
+                "Z_last": np.asarray(r.state.factors[0]),
+                "W_last": [np.asarray(f) for f in r.state.factors[1:]],
+            }
+        out.update({
             "rmse_train": [b.rmse_train_trace for b in r.blocks],
             "runtime_s": r.runtime_s,
             "state": r.state,
+            "diagnostics": r.diagnostics,
             "result": r,
-        }
+        })
+        return out
 
 
 def smurff(train, test=None, side_info=(None, None), num_latent=16,
            burnin=100, nsamples=100, noise=None, seed=0,
            use_pallas=False, verbose=0, mesh=None, pipeline=None,
+           chains=None, chain_axis=None,
            save_freq=0, save_dir=None) -> SessionResult:
     """One-call convenience API (mirrors ``smurff.smurff(...)``).
 
     Forwards the full knob set — including ``mesh``/``pipeline``
-    (distributed sweep + exchange pipeline) and ``save_freq``/
-    ``save_dir`` (posterior-sample streaming for ``PredictSession``).
+    (distributed sweep + exchange pipeline), ``chains``/``chain_axis``
+    (vectorized multi-chain sampling + convergence diagnostics), and
+    ``save_freq``/``save_dir`` (posterior-sample streaming for
+    ``PredictSession``).
     """
     sess = TrainSession(num_latent=num_latent, burnin=burnin,
                         nsamples=nsamples, seed=seed,
                         use_pallas=use_pallas, verbose=verbose,
                         mesh=mesh, pipeline=pipeline,
+                        chains=chains, chain_axis=chain_axis,
                         save_freq=save_freq, save_dir=save_dir)
     sess.add_train_and_test(train, test=test, noise=noise)
     for axis, F in enumerate(side_info):

@@ -51,6 +51,15 @@ Variants:
                   all-gathers, and each hop is issued before the
                   previous chunk is consumed so the exchange hides
                   behind local work.
+    chains4       four independent Gibbs chains through
+                  ``make_multi_chain_step`` on a ("chain", 4) x
+                  ("data", S/4) mesh — chains x shards fills the pod,
+                  each 64-shard group sweeps ONE local chain, so the
+                  per-group collective census equals the single-chain
+                  census at 64 shards (``contract_for(..., chains=4,
+                  chain_axis_size=4)``) while useful FLOPs scale by 4.
+                  This is the convergence-diagnostics posture: R-hat /
+                  ESS need >= 2 chains (``core.diagnostics``).
 
 Exchange model (per-sweep per-device seconds, in every record):
     exchange_s_serial   collective_bytes / ICI_BW — the wire time,
@@ -233,15 +242,17 @@ def mf_model_flops(cell: MFCell, n_chips: int) -> float:
 def lower_cell(cell: MFCell, mesh, variant: str):
     from ..analysis.contract import check_compiled, contract_for
     from ..core.distributed import (distributed_supported,
-                                    make_distributed_step)
-    from ..core.gibbs import init_state
+                                    make_distributed_step,
+                                    make_multi_chain_step)
+    from ..core.gibbs import init_chain_states, init_state, stack_states
     from .hlo_cost import analyze as hlo_analyze
     from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
     model = build_model(cell, variant)
     data = abstract_data(cell)
-    state = jax.eval_shape(lambda: init_state(model, data, 0))
     pipeline = "ring" if "ring" in variant else "eager"
+    chains = 4 if "chains4" in variant else 1
+    chain_axis = "chain" if chains > 1 else None
 
     t0 = time.perf_counter()
     # explicit shard_map sweep (one fixed-factor exchange per
@@ -249,8 +260,16 @@ def lower_cell(cell: MFCell, mesh, variant: str):
     # the sharded subset — assert rather than silently fall back to the
     # auto-partitioned path whose collectives we are here to measure.
     assert distributed_supported(model, mesh, data), cell.name
-    step, ds, ss = make_distributed_step(model, mesh, data, state,
-                                         pipeline=pipeline)
+    if chains > 1:
+        state = jax.eval_shape(lambda: stack_states(
+            init_chain_states(model, data, 0, chains)))
+        step, ds, ss = make_multi_chain_step(
+            model, mesh, data, state, pipeline=pipeline,
+            chains=chains, chain_axis=chain_axis)
+    else:
+        state = jax.eval_shape(lambda: init_state(model, data, 0))
+        step, ds, ss = make_distributed_step(model, mesh, data, state,
+                                             pipeline=pipeline)
     lowered = step.lower(data, state)
     t_lower = time.perf_counter() - t0
     compiled = lowered.compile()
@@ -262,7 +281,9 @@ def lower_cell(cell: MFCell, mesh, variant: str):
     # the derived communication contract, verified against the very
     # HLO whose roofline we are recording (trip-count-aware, so the
     # scan-rolled ring at 256 shards counts its E*(S-1) hops)
-    contract = contract_for(model, tuple(mesh.devices.shape), pipeline)
+    cas = int(mesh.shape[chain_axis]) if chain_axis else None
+    contract = contract_for(model, tuple(mesh.devices.shape), pipeline,
+                            chains=chains, chain_axis_size=cas)
     violations = check_compiled(contract, ctxt)
     n_chips = mesh.devices.size
     bytes_hbm = (hc["bytes_materialized"]
@@ -278,7 +299,9 @@ def lower_cell(cell: MFCell, mesh, variant: str):
     # cannot cover (see module docstring)
     exchange = coll if pipeline == "eager" \
         else max(coll - max(comp, memt), 0.0)
-    mf = mf_model_flops(cell, n_chips)
+    # C chains sweep C posteriors — per-device useful FLOPs scale by C
+    # (each of the S/axis_size-shard groups sweeps its local chains)
+    mf = mf_model_flops(cell, n_chips) * chains
     bound = max(comp, memt, coll)
     rec = {
         "arch": f"mf_{cell.name}", "shape": "gibbs_sweep",
@@ -307,6 +330,9 @@ def lower_cell(cell: MFCell, mesh, variant: str):
         "contract": contract.asdict(),
         "contract_ok": not violations,
     }
+    if chains > 1:
+        rec["chains"] = chains
+        rec["chain_axis_size"] = cas
     if violations:
         rec["contract_violations"] = violations
     # audited per-kernel VMEM estimates (PR 8): the same report the
@@ -320,8 +346,14 @@ def lower_cell(cell: MFCell, mesh, variant: str):
 
 def run_cell(cell_name: str, mesh_kind: str, variant: str,
              save: bool = True):
-    from .mesh import make_production_mesh
-    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    from .mesh import make_mesh, make_production_mesh
+    if "chains4" in variant:
+        # chains x shards fills the same chip count: a ("chain", 4)
+        # axis carved out of the pod, rows sharded over the rest
+        n = 512 if mesh_kind == "multi" else 256
+        mesh = make_mesh((4, n // 4), ("chain", "data"))
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     cell = CELLS[cell_name]
     try:
         rec = lower_cell(cell, mesh, variant)
@@ -348,7 +380,8 @@ def main() -> None:
     # not lower 256 chips and write a baseline JSON under a bogus tag)
     ap.add_argument("--variant", default="baseline",
                     choices=["baseline", "bf16gather", "ring",
-                             "bf16gather_ring"])
+                             "bf16gather_ring", "chains4",
+                             "chains4_ring"])
     args = ap.parse_args()
     cells = list(CELLS) if args.cell == "all" else [args.cell]
     meshes = {"single": ["single"], "multi": ["multi"],

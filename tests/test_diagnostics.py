@@ -1,0 +1,249 @@
+"""Convergence diagnostics (core/diagnostics.py) against a hand-rolled
+numpy oracle.
+
+The oracle recomputes split-R-hat and bulk-ESS from the Vehtari et al.
+(2021) formulas with deliberately DIFFERENT numerics than the module:
+the inverse normal CDF via bisection on ``math.erf`` (the module uses
+Acklam's rational approximation), tie-averaged ranks via an explicit
+sorted-group walk (the module uses ``np.unique``/``np.add.at``), and
+per-chain autocovariances via explicit double loops (the module uses
+``np.correlate``).  Agreement therefore pins the ESTIMATOR, not one
+implementation against itself.
+
+Behavioral pins: iid chains pass the gate, a mean-shifted chain and a
+single non-stationary chain fail it, strong autocorrelation slashes
+ESS, and degenerate inputs (short, constant, non-finite) return nan
+rather than a misleading number.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.diagnostics import (DEFAULT_RHAT_THRESHOLD, Diagnostics,
+                                    MIN_DRAWS, _ndtri, bulk_ess,
+                                    compute_diagnostics, ess,
+                                    load_diagnostics, rank_normalize,
+                                    save_diagnostics, split_chains,
+                                    split_rhat)
+
+
+# ---------------------------------------------------------------------------
+# the oracle
+# ---------------------------------------------------------------------------
+
+def _oracle_phi_inv(p: float) -> float:
+    """Invert Phi by bisection on erf — no shared code with _ndtri."""
+    lo, hi = -12.0, 12.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if 0.5 * (1.0 + math.erf(mid / math.sqrt(2.0))) < p:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def _oracle_split(x: np.ndarray) -> np.ndarray:
+    half = x.shape[1] // 2
+    return np.vstack([x[:, :half], x[:, x.shape[1] - half:]])
+
+
+def _oracle_rhat(x: np.ndarray) -> float:
+    z = _oracle_split(np.asarray(x, np.float64))
+    m, n = z.shape
+    w = float(np.mean([np.var(z[c], ddof=1) for c in range(m)]))
+    b = n * float(np.var([z[c].mean() for c in range(m)], ddof=1))
+    var_hat = (n - 1) / n * w + b / n
+    return math.sqrt(var_hat / w)
+
+
+def _oracle_rank_normalize(x: np.ndarray) -> np.ndarray:
+    flat = np.asarray(x, np.float64).ravel()
+    s = flat.size
+    order = np.argsort(flat, kind="mergesort")
+    srt = flat[order]
+    rr = np.empty(s)
+    i = 0
+    while i < s:          # walk tie groups in sorted order
+        j = i
+        while j + 1 < s and srt[j + 1] == srt[i]:
+            j += 1
+        rr[i:j + 1] = 0.5 * (i + j) + 1.0   # average 1-based rank
+        i = j + 1
+    ranks = np.empty(s)
+    ranks[order] = rr
+    z = np.array([_oracle_phi_inv((r - 0.375) / (s + 0.25))
+                  for r in ranks])
+    return z.reshape(x.shape)
+
+
+def _oracle_ess(z: np.ndarray) -> float:
+    """ESS of already-prepared draws, explicit-loop autocovariances."""
+    m, n = z.shape
+    acov = np.zeros((m, n))
+    for c in range(m):
+        mu = z[c].mean()
+        for t in range(n):
+            acc = 0.0
+            for i in range(n - t):
+                acc += (z[c, i] - mu) * (z[c, i + t] - mu)
+            acov[c, t] = acc / n
+    w = float(np.mean(acov[:, 0] * n / (n - 1.0)))
+    b_over_n = float(np.var(z.mean(axis=1), ddof=1)) if m > 1 else 0.0
+    var_hat = (n - 1.0) / n * w + b_over_n
+    rho = 1.0 - (w - acov.mean(axis=0)) / var_hat
+    pair_sums = []
+    prev = math.inf
+    t = 0
+    while 2 * t + 1 < n:
+        p = rho[2 * t] + rho[2 * t + 1]
+        if p < 0.0:
+            break
+        p = min(p, prev)
+        pair_sums.append(p)
+        prev = p
+        t += 1
+    tau = -rho[0] + 2.0 * sum(pair_sums) if pair_sums else 1.0
+    tau = max(tau, 1.0 / math.log10(max(m * n, 10)))
+    return m * n / tau
+
+
+def _oracle_bulk_ess(x: np.ndarray) -> float:
+    return _oracle_ess(_oracle_rank_normalize(_oracle_split(
+        np.asarray(x, np.float64))))
+
+
+def _chains(seed, c=4, n=60, phi=0.0, shift=None):
+    """AR(1) chains; ``shift[c]`` offsets chain c's mean."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((c, n))
+    eps = rng.normal(size=(c, n))
+    for t in range(n):
+        x[:, t] = (phi * x[:, t - 1] if t else 0.0) + eps[:, t]
+    if shift is not None:
+        x += np.asarray(shift)[:, None]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# oracle agreement
+# ---------------------------------------------------------------------------
+
+def test_ndtri_matches_erf_bisection():
+    p = np.concatenate([np.array([1e-9, 1e-6, 0.02, 0.024, 0.025]),
+                        np.linspace(0.03, 0.97, 41),
+                        np.array([0.975, 0.976, 0.98, 1 - 1e-6])])
+    got = _ndtri(p)
+    want = np.array([_oracle_phi_inv(v) for v in p])
+    assert np.max(np.abs(got - want)) < 1e-7
+
+
+@pytest.mark.parametrize("n", [25, 60])   # odd n drops the middle draw
+@pytest.mark.parametrize("phi", [0.0, 0.7])
+def test_split_rhat_matches_oracle(n, phi):
+    x = _chains(1, n=n, phi=phi)
+    assert split_rhat(x) == pytest.approx(_oracle_rhat(x), rel=1e-12)
+    shifted = _chains(2, n=n, phi=phi, shift=[0, 0, 0, 3.0])
+    assert split_rhat(shifted) == pytest.approx(_oracle_rhat(shifted),
+                                                rel=1e-12)
+
+
+def test_split_chains_layout():
+    x = np.arange(10, dtype=float).reshape(2, 5)
+    z = split_chains(x)
+    # odd length: middle draw dropped, first/second halves stacked
+    assert z.shape == (4, 2)
+    assert np.array_equal(z, [[0, 1], [5, 6], [3, 4], [8, 9]])
+
+
+def test_rank_normalize_matches_oracle_and_averages_ties():
+    x = _chains(3, c=2, n=20)
+    x[0, 3] = x[1, 7] = x[0, 11]          # seed a 3-way tie
+    got = rank_normalize(x)
+    want = _oracle_rank_normalize(x)
+    assert np.max(np.abs(got - want)) < 1e-7
+    tied = got[[0, 1, 0], [3, 7, 11]]
+    assert tied[0] == tied[1] == tied[2]
+
+
+@pytest.mark.parametrize("phi", [0.0, 0.5, 0.9])
+def test_bulk_ess_matches_oracle(phi):
+    x = _chains(4, c=3, n=50, phi=phi)
+    assert bulk_ess(x) == pytest.approx(_oracle_bulk_ess(x), rel=1e-6)
+
+
+def test_ess_matches_oracle_without_rank_normalization():
+    x = _chains(5, c=2, n=40, phi=0.6)
+    assert ess(x) == pytest.approx(_oracle_ess(
+        np.asarray(x, np.float64)), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# behavioral pins
+# ---------------------------------------------------------------------------
+
+def test_iid_chains_pass_and_mixing_failures_flag():
+    iid = _chains(6, c=4, n=250)
+    assert abs(split_rhat(iid) - 1.0) < 0.02
+    assert bulk_ess(iid) > 0.5 * iid.size
+    # one chain sampling a different mean: R-hat blows up, ESS craters
+    bad = _chains(7, c=4, n=250, shift=[0, 0, 0, 5.0])
+    assert split_rhat(bad) > 1.5
+    assert bulk_ess(bad) < 0.1 * bad.size
+    # a single drifting chain flags ITSELF through the split
+    drift = np.linspace(0.0, 5.0, 200)[None, :] + _chains(8, c=1, n=200)
+    assert split_rhat(drift) > 1.5
+
+
+def test_autocorrelation_slashes_ess():
+    fast = bulk_ess(_chains(9, c=4, n=200, phi=0.0))
+    slow = bulk_ess(_chains(9, c=4, n=200, phi=0.9))
+    # AR(1) theory: ESS ratio ~ (1-phi)/(1+phi) = 1/19
+    assert slow < 0.25 * fast
+
+
+def test_degenerate_inputs_return_nan_not_lies():
+    short = np.zeros((2, MIN_DRAWS - 1))
+    assert math.isnan(split_rhat(short))
+    assert math.isnan(bulk_ess(short))
+    nonfinite = _chains(10, c=2, n=20)
+    nonfinite[1, 5] = np.nan
+    assert math.isnan(split_rhat(nonfinite))
+    assert math.isnan(bulk_ess(nonfinite))
+    # identical constants: converged by definition; differing
+    # constants: undefined -> nan (and the gate flags nan)
+    assert split_rhat(np.full((3, 20), 2.5)) == 1.0
+    assert math.isnan(bulk_ess(np.full((3, 20), 2.5)))
+    two_consts = np.vstack([np.zeros(20), np.ones(20)])
+    assert math.isnan(split_rhat(two_consts))
+
+
+def test_diagnostics_gate_and_roundtrip(tmp_path):
+    traces = {"rmse": _chains(11, c=4, n=40),
+              "alpha": _chains(12, c=4, n=40, shift=[0, 0, 0, 9.0])}
+    d = compute_diagnostics(traces)
+    assert d.n_chains == 4 and d.n_draws == 40
+    assert set(d.rhat) == set(d.ess) == {"rmse", "alpha"}
+    failing = d.failing(DEFAULT_RHAT_THRESHOLD)
+    assert "alpha" in failing
+    assert not d.converged()
+    assert d.converged(threshold=float(d.max_rhat))
+    # nan R-hat is never convergence evidence
+    d2 = Diagnostics(n_chains=2, n_draws=10,
+                     rhat={"x": float("nan")}, ess={"x": float("nan")})
+    assert "x" in d2.failing(1e9)
+    assert not Diagnostics(2, 10).converged()   # no quantities at all
+
+    save_diagnostics(str(tmp_path), d)
+    back = load_diagnostics(str(tmp_path))
+    assert back.n_chains == d.n_chains and back.n_draws == d.n_draws
+    for k in d.rhat:
+        assert back.rhat[k] == pytest.approx(d.rhat[k])
+        assert back.ess[k] == pytest.approx(d.ess[k])
+    assert load_diagnostics(str(tmp_path / "nope")) is None
+
+
+def test_bad_shape_rejected():
+    with pytest.raises(ValueError, match="chains, draws"):
+        split_rhat(np.zeros((2, 3, 4)))

@@ -1,0 +1,544 @@
+"""Vectorized multi-chain sampling (``chains=C``) and everything it
+gates: bitwise chain independence, the multi-chain sample store,
+``PredictSession`` pooling + the R-hat convergence gate, and the
+session/serving correctness fixes that rode along (per-axis side-info
+precisions, single-query exclude normalization, background checkpoint
+error propagation, resume bookkeeping).
+
+The reproducibility contract (see ``gibbs.multi_chain_step``): chains
+map over the leading axis with ``lax.map`` — each chain runs the
+IDENTICAL per-chain subgraph, so chain c of a C-chain run is BITWISE
+the single-chain run keyed ``chain_keys(seed, C)[c]``, and chain 0
+(keyed with the unfolded base key) IS the golden single-chain run for
+the same seed.  ``vmap`` would batch the per-chain reductions and
+drift ~1e-6 — that is why the engine does not use it.
+
+The 8-device shard_map side of the same contract (eager + ring, and
+the ``chain_axis`` mesh layout) runs in a subprocess (slow marker) —
+the device count must be set before jax initializes.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import gibbs
+from repro.core.session import (GFASession, ModelBuilder, Session,
+                                SweepInfo, TrainSession, resolve_chains)
+from repro.core.sparse import from_coo
+
+
+def _bmf_data(seed=0, shape=(30, 20), rank=3, density=0.6):
+    rng = np.random.default_rng(seed)
+    U = rng.normal(size=(shape[0], rank))
+    V = rng.normal(size=(shape[1], rank))
+    R = (U @ V.T + 0.1 * rng.normal(size=shape)).astype(np.float32)
+    i, j = np.nonzero(rng.random(shape) < density)
+    v = R[i, j]
+    n_tr = int(0.8 * len(v))
+    perm = rng.permutation(len(v))
+    tr, te = perm[:n_tr], perm[n_tr:]
+    train = from_coo(i[tr], j[tr], v[tr], shape)
+    return train, (i[te], j[te], v[te])
+
+
+def _leaves_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# bitwise chain independence (single device)
+# ---------------------------------------------------------------------------
+
+def test_multi_chain_step_bitwise_vs_independent_runs():
+    """C stacked chains advanced by ``multi_chain_step`` equal C
+    independent single-chain runs keyed ``chain_keys(seed, C)`` —
+    BITWISE, every leaf, every metric, over multiple sweeps."""
+    b = ModelBuilder(num_latent=4)
+    b.add_entity("u", 24)
+    b.add_entity("v", 16)
+    train, _ = _bmf_data(3, (24, 16))
+    b.add_block("u", "v", train)
+    model, data, _ = b.build()
+
+    C, sweeps = 3, 3
+    keys = gibbs.chain_keys(11, C)
+    # chain 0 uses the UNFOLDED base key: the golden single-chain run
+    assert np.array_equal(np.asarray(keys[0]),
+                          np.asarray(jax.random.PRNGKey(11)))
+    step1 = jax.jit(gibbs.gibbs_step, static_argnums=0)
+    indep, indep_metrics = [], []
+    for k in keys:
+        st = gibbs.init_state(model, data, 11, key=k)
+        for _ in range(sweeps):
+            st, m = step1(model, data, st)
+        indep.append(st)
+        indep_metrics.append(m)
+
+    stacked = gibbs.stack_states(
+        gibbs.init_chain_states(model, data, 11, C))
+    for _ in range(sweeps):
+        stacked, sm = gibbs.multi_chain_step_jit(model, data, stacked)
+
+    for c in range(C):
+        assert _leaves_equal(gibbs.unstack_state(stacked, c), indep[c]), c
+        for name, v in sm.items():
+            assert np.asarray(v)[c] == np.asarray(
+                indep_metrics[c][name]), (c, name)
+
+
+def test_session_chain_zero_is_the_single_chain_run():
+    """A ``chains=3`` session's chain 0 replays the ``chains=1`` run
+    unchanged: train trace bitwise, final state bitwise — the
+    golden-chain guarantee that multi-chain is purely additive."""
+    train, test = _bmf_data(1)
+    infos = []
+    # chains=1 explicitly: this baseline must stay single-chain even
+    # under the CI leg's REPRO_CHAINS=4 env default
+    single = TrainSession(num_latent=4, burnin=3, nsamples=4, seed=5,
+                          chains=1)
+    single.add_train_and_test(train, test)
+    r1 = single.run()
+
+    multi = TrainSession(num_latent=4, burnin=3, nsamples=4, seed=5,
+                         chains=3, callbacks=[infos.append])
+    multi.add_train_and_test(train, test)
+    r3 = multi.run()
+
+    assert r3.n_chains == 3
+    assert r3.chain_blocks is not None and len(r3.chain_blocks) == 3
+    # chain-0 trace IS the single-chain trace (and the back-compat
+    # top-level trace follows chain 0)
+    assert r3.chain_blocks[0][0].rmse_train_trace == r1.rmse_train_trace
+    assert r3.rmse_train_trace == r1.rmse_train_trace
+    assert _leaves_equal(gibbs.unstack_state(r3.state, 0), r1.state)
+    # chains 1..C-1 are genuinely different chains
+    assert r3.chain_blocks[1][0].rmse_train_trace \
+        != r1.rmse_train_trace
+    # callbacks: metrics stay chain-0 scalars, chain_metrics stacks C
+    assert all(isinstance(i, SweepInfo) for i in infos)
+    last = infos[-1]
+    assert np.ndim(last.metrics["rmse_train_0"]) == 0
+    assert np.asarray(last.chain_metrics["rmse_train_0"]).shape == (3,)
+    assert float(last.metrics["rmse_train_0"]) == float(
+        np.asarray(last.chain_metrics["rmse_train_0"])[0])
+    # diagnostics computed over the post-burnin per-chain traces
+    assert r3.diagnostics is not None
+    assert r3.diagnostics.n_chains == 3
+    assert r3.diagnostics.n_draws == 4
+    assert "rmse_train_0" in r3.diagnostics.rhat
+    assert any(k.startswith("factor_rms_") for k in r3.diagnostics.rhat)
+    # a single-chain run records no cross-chain evidence fields
+    assert r1.n_chains == 1 and r1.chain_blocks is None
+
+
+def test_resolve_chains_env_and_validation(monkeypatch):
+    monkeypatch.delenv("REPRO_CHAINS", raising=False)
+    assert resolve_chains() == 1
+    assert resolve_chains(4) == 4
+    monkeypatch.setenv("REPRO_CHAINS", "3")
+    assert resolve_chains() == 3          # the CI smoke-leg hook
+    assert resolve_chains(2) == 2         # explicit beats env
+    with pytest.raises(ValueError, match="chains"):
+        resolve_chains(0)
+
+
+def test_chain_axis_requires_mesh():
+    train, _ = _bmf_data(2)
+    b = ModelBuilder(num_latent=4)
+    b.add_entity("u", 30)
+    b.add_entity("v", 20)
+    b.add_block("u", "v", train)
+    model, data, _ = b.build()
+    with pytest.raises(ValueError, match="mesh"):
+        Session(model, data, chains=2, chain_axis="chain")
+
+
+# ---------------------------------------------------------------------------
+# the multi-chain store + PredictSession pooling + convergence gate
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mc_store(tmp_path_factory):
+    """One chains=3 Macau run streaming every post-burnin sample."""
+    d = str(tmp_path_factory.mktemp("mc_store"))
+    train, test = _bmf_data(7)
+    rng = np.random.default_rng(8)
+    F = rng.normal(size=(30, 5)).astype(np.float32)
+    s = TrainSession(num_latent=4, burnin=4, nsamples=5, seed=9,
+                     chains=3, save_freq=1, save_dir=d)
+    s.add_train_and_test(train, test)
+    s.add_side_info(0, F)
+    r = s.run()
+    return d, r, test, F
+
+
+def test_store_layout_and_standalone_chain_stores(mc_store):
+    from repro.core.modelspec import (chain_count_on_disk,
+                                      load_model_spec)
+    from repro.core.predict import PredictSession
+    d, r, test, _ = mc_store
+    assert chain_count_on_disk(d) == 3
+    top = load_model_spec(os.path.join(d, "model.json"))
+    assert top["run"]["chains"] == 3
+    assert os.path.exists(os.path.join(d, "diagnostics.json"))
+    # every chain_<c>/ is a complete SINGLE-chain store on its own
+    sub = PredictSession(os.path.join(d, "chain_1"))
+    assert sub.n_chains == 1
+    assert sub.num_samples == 5
+    spec = load_model_spec(os.path.join(d, "chain_1", "model.json"))
+    assert spec["run"]["chain"] == 1
+
+
+def test_predict_session_pools_all_chains_in_session_order(mc_store):
+    from repro.core.predict import PredictSession
+    d, r, test, _ = mc_store
+    p = PredictSession(d)
+    assert p.n_chains == 3
+    assert p.num_samples == 15            # 3 chains x 5 samples
+    assert p.steps == [5, 6, 7, 8, 9]
+    # pooled ids are step-major chain-minor — the in-session
+    # accumulation order, so the reload replays the same summation
+    assert p.chain_steps[:4] == [(5, 0), (5, 1), (5, 2), (6, 0)]
+    pm = p.predict(test[0], test[1])
+    assert np.allclose(np.asarray(pm), r.predictions, atol=1e-5)
+    rmse = float(np.sqrt(np.mean((np.asarray(pm) - test[2]) ** 2)))
+    assert rmse == pytest.approx(r.rmse_test, abs=1e-5)
+    # chain addressing validates both coordinates
+    p.load_sample(5, chain=2)
+    with pytest.raises(ValueError, match="chain"):
+        p.load_sample(5, chain=3)
+    with pytest.raises(ValueError, match="saved steps"):
+        p.load_sample(4, chain=0)
+
+
+def test_predict_session_convergence_gate(mc_store, tmp_path):
+    import shutil
+    import warnings
+    from repro.core.predict import PredictSession
+    d, r, _, _ = mc_store
+    # refuse below the recorded worst R-hat, naming the offenders
+    worst_k = max((k for k, v in r.diagnostics.rhat.items()
+                   if np.isfinite(v)), key=r.diagnostics.rhat.get)
+    thr_fail = float(r.diagnostics.rhat[worst_k]) - 1e-6
+    with pytest.raises(ValueError, match="NOT converged") as ei:
+        PredictSession(d, require_converged=True,
+                       rhat_threshold=thr_fail)
+    assert worst_k in str(ei.value)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        PredictSession(d, require_converged="warn",
+                       rhat_threshold=thr_fail)
+    assert any("NOT converged" in str(x.message) for x in w)
+    # a converged store serves: threshold above the recorded worst
+    thr = float(r.diagnostics.max_rhat) + 0.1
+    p = PredictSession(d, require_converged=True, rhat_threshold=thr)
+    assert p.diagnostics.converged(thr)
+    # a store with NO recorded diagnostics must refuse too — absence
+    # of evidence is not convergence evidence
+    d2 = tmp_path / "nodiag"
+    shutil.copytree(d, d2)
+    os.remove(d2 / "diagnostics.json")
+    with pytest.raises(ValueError, match="diagnostics"):
+        PredictSession(str(d2), require_converged=True)
+    assert PredictSession(str(d2)).diagnostics is None   # ungated ok
+
+
+def test_recommend_single_query_exclude_normalization(mc_store):
+    """``recommend(user=3, exclude=[])`` must mean "exclude nothing",
+    not "you passed 0 exclude lists for 1 query" — plus the flat-list
+    convenience for warm AND cold single queries."""
+    from repro.core.predict import PredictSession
+    d, _, _, F = mc_store
+    p = PredictSession(d)
+    # warm, empty exclude
+    r0 = p.recommend(user=3, k=5, exclude=[])
+    assert r0.ids.shape == (1, 5)
+    # warm, flat id list
+    r1 = p.recommend(user=3, k=5, exclude=[1, 2])
+    assert 1 not in r1.ids[0] and 2 not in r1.ids[0]
+    # flat numpy ids behave like the list
+    r2 = p.recommend(user=3, k=5, exclude=np.array([1, 2]))
+    assert np.array_equal(r1.ids, r2.ids)
+    # cold single query through the Macau link, flat + empty excludes
+    f_new = F[:1] + 0.01
+    rc = p.recommend(features=f_new, k=5, exclude=[7])
+    assert rc.ids.shape == (1, 5) and 7 not in rc.ids[0]
+    assert p.recommend(features=f_new, k=5,
+                       exclude=[]).ids.shape == (1, 5)
+    # multi-query still demands one sequence per query
+    r3 = p.recommend(user=[0, 1], k=5, exclude=[[1], []])
+    assert r3.ids.shape == (2, 5) and 1 not in r3.ids[0]
+    with pytest.raises(ValueError, match="per query"):
+        p.recommend(user=[0, 1], k=5, exclude=[[1]])
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: side-info axes, checkpoint errors, resume
+# ---------------------------------------------------------------------------
+
+def test_add_side_info_keeps_per_axis_precisions():
+    """A second ``add_side_info`` call must not clobber the first
+    axis's ``beta_precision`` / ``sample_beta_precision``."""
+    from repro.core.priors import MacauPrior
+    train, _ = _bmf_data(4)
+    rng = np.random.default_rng(5)
+    s = TrainSession(num_latent=4, burnin=1, nsamples=1)
+    s.add_train_and_test(train)
+    s.add_side_info(0, rng.normal(size=(30, 6)).astype(np.float32),
+                    beta_precision=2.5, sample_beta_precision=False)
+    s.add_side_info(1, rng.normal(size=(20, 3)).astype(np.float32),
+                    beta_precision=7.0, sample_beta_precision=True)
+    model, _, _ = s._builder().build()
+    rows, cols = model.entities
+    assert isinstance(rows.prior, MacauPrior)
+    assert isinstance(cols.prior, MacauPrior)
+    assert rows.prior.beta_precision == 2.5
+    assert rows.prior.sample_beta_precision is False
+    assert cols.prior.beta_precision == 7.0
+    assert cols.prior.sample_beta_precision is True
+    with pytest.raises(ValueError, match=r"\(0, 1\)"):
+        s.add_side_info(2, rng.normal(size=(9, 2)))
+
+
+def test_background_checkpoint_error_surfaces(tmp_path, monkeypatch):
+    """A failed background save re-raises from the next ``save()`` /
+    ``wait()`` on the training thread instead of dying silently (an
+    incomplete posterior store nobody notices is worse than a crash),
+    and a handled failure does not re-raise forever."""
+    from repro.checkpoint import CheckpointManager
+    from repro.checkpoint import ckpt as ckpt_mod
+
+    mgr = CheckpointManager(str(tmp_path / "s"), keep=None)
+    tree = {"x": np.arange(3.0)}
+
+    def boom(tree, path):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_mod, "save_pytree", boom)
+    mgr.save(1, tree)                      # background thread fails
+    with pytest.raises(RuntimeError, match="disk full"):
+        mgr.wait()
+    mgr.wait()                             # cleared after the raise
+    monkeypatch.undo()
+    mgr.save(2, tree)                      # manager still usable
+    mgr.wait()
+    assert mgr.all_steps() == [2]
+    # the re-raise also fires from the next save() call
+    monkeypatch.setattr(ckpt_mod, "save_pytree", boom)
+    mgr.save(3, tree)
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="disk full"):
+        mgr.save(4, tree)
+
+
+@pytest.mark.parametrize("chains", [1, 3])
+def test_resume_records_resumed_from(tmp_path, chains):
+    train, test = _bmf_data(6)
+    d = str(tmp_path / f"store{chains}")
+    kw = dict(num_latent=3, burnin=2, seed=2, chains=chains,
+              save_freq=1, save_dir=d)
+    s = TrainSession(nsamples=3, **kw)
+    s.add_train_and_test(train, test)
+    r = s.run()
+    assert r.resumed_from is None
+    # extend the schedule and resume: picks up at the saved sweep count
+    s2 = TrainSession(nsamples=6, **kw)
+    s2.add_train_and_test(train, test)
+    r2 = s2.run(resume=True)
+    assert r2.resumed_from == 5            # burnin 2 + 3 saved draws
+    assert len(r2.rmse_train_trace) == 3   # only post-resume sweeps
+    assert r2.rmse_test is not None
+
+
+def test_gfa_resume_past_end_raises_instead_of_zero_means(tmp_path):
+    rng = np.random.default_rng(0)
+    views = [rng.normal(size=(16, 6)).astype(np.float32),
+             rng.normal(size=(16, 4)).astype(np.float32)]
+    d = str(tmp_path / "gfa")
+    kw = dict(num_latent=3, burnin=2, nsamples=3, seed=1,
+              save_freq=1, save_dir=d)
+    GFASession(views, **kw).run()
+    with pytest.raises(ValueError, match="ZERO posterior draws"):
+        GFASession(views, **kw).run(resume=True)
+
+
+def test_gfa_multichain_follows_chain_zero():
+    rng = np.random.default_rng(1)
+    views = [rng.normal(size=(16, 6)).astype(np.float32),
+             rng.normal(size=(16, 4)).astype(np.float32)]
+    kw = dict(num_latent=3, burnin=3, nsamples=3, seed=4)
+    single = GFASession(views, chains=1, **kw).run()
+    multi = GFASession(views, chains=2, **kw).run()
+    # rotation indeterminacy forbids pooling loadings across chains:
+    # Z/W follow chain 0 — bitwise the single-chain run
+    assert np.array_equal(multi["Z"], single["Z"])
+    for wm, ws in zip(multi["W"], single["W"]):
+        assert np.array_equal(wm, ws)
+    assert multi["Z_chains"].shape == (2,) + single["Z"].shape
+    assert multi["diagnostics"] is not None
+    assert multi["diagnostics"].n_chains == 2
+    # a single chain still gets split-R-hat (catches drift within it)
+    assert single["diagnostics"].n_chains == 1
+
+
+# ---------------------------------------------------------------------------
+# contract arithmetic (no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_contract_for_chain_census_arithmetic():
+    from repro.analysis.contract import contract_for
+    train, _ = _bmf_data(2)
+    b = ModelBuilder(num_latent=4)
+    b.add_entity("u", 30)
+    b.add_entity("v", 20)
+    b.add_block("u", "v", train)
+    model, _, _ = b.build()
+
+    base = contract_for(model, (8,), "eager")
+    c3 = contract_for(model, (8,), "eager", chains=3)
+    # no chain axis: every shard sweeps all C chains serially — counts
+    # scale by C, per-op payloads do not
+    assert c3.chains == 3
+    assert c3.n_shards == 8
+    assert c3.all_gathers == 3 * base.all_gathers
+    assert c3.all_reduces == 3 * base.all_reduces
+    assert c3.max_reduce_elems == base.max_reduce_elems
+    # chain axis: chains spread over it — the per-group census equals
+    # the single-chain census on the SMALLER shard group
+    cx = contract_for(model, (2, 4), "ring", chains=2,
+                      chain_axis_size=2)
+    assert cx.chains == 1
+    assert cx.n_shards == 4
+    assert cx.collective_permutes == 2 * (4 - 1)   # E * (S-1), S=4
+    with pytest.raises(ValueError, match="divide"):
+        contract_for(model, (2, 4), "eager", chains=3,
+                     chain_axis_size=2)
+    with pytest.raises(ValueError, match="chains"):
+        contract_for(model, (8,), "eager", chains=0)
+
+
+# ---------------------------------------------------------------------------
+# 8-device shard_map parity + census (subprocess; slow)
+# ---------------------------------------------------------------------------
+
+_MC_DISTRIBUTED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import gibbs
+    from repro.core.distributed import (make_distributed_step,
+                                        make_multi_chain_step)
+    from repro.launch.mesh import make_mesh
+    from repro.core.session import ModelBuilder
+    from repro.core.sparse import from_coo
+    from repro.analysis.contract import assert_contract, contract_for
+
+    rng = np.random.default_rng(3)
+    b = ModelBuilder(num_latent=4)
+    b.add_entity("u", 48); b.add_entity("v", 32)
+    i = rng.integers(0, 48, 300); j = rng.integers(0, 32, 300)
+    v = rng.normal(size=300).astype(np.float32)
+    b.add_block("u", "v", from_coo(i, j, v, (48, 32)))
+    model, data, _ = b.build()
+
+    def leaves_equal(a, b):
+        return all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(jax.tree.leaves(a),
+                                   jax.tree.leaves(b)))
+
+    C, SW = 3, 2
+    for pipeline in ("eager", "ring"):
+        mesh = make_mesh((8,), ("data",))
+        # C independent distributed chains through ONE compiled step
+        keys = gibbs.chain_keys(11, C)
+        st0 = gibbs.init_state(model, data, 11, key=keys[0])
+        fn, ds, ss = make_distributed_step(model, mesh, data, st0,
+                                           pipeline)
+        dd = jax.device_put(data, ds)
+        indep = []
+        for k in keys:
+            st = jax.device_put(
+                gibbs.init_state(model, data, 11, key=k), ss)
+            for _ in range(SW):
+                st, m = fn(dd, st)
+            indep.append(jax.tree.map(np.asarray, st))
+        # the stacked multi-chain program, same mesh
+        stacked = gibbs.stack_states(
+            gibbs.init_chain_states(model, data, 11, C))
+        mfn, mds, mss = make_multi_chain_step(model, mesh, data,
+                                              stacked, pipeline,
+                                              chains=C)
+        stk = jax.device_put(stacked, mss)
+        for _ in range(SW):
+            stk, mm = mfn(jax.device_put(data, mds), stk)
+        stk = jax.tree.map(np.asarray, stk)
+        for c in range(C):
+            assert leaves_equal(gibbs.unstack_state(stk, c),
+                                indep[c]), (pipeline, c)
+        assert np.asarray(mm["rmse_train_0"]).shape == (C,)
+        # the census: contract verified on THIS program's StableHLO
+        # and compiled HLO, counts scaled by C
+        low = mfn.lower(data, stacked)
+        contract = contract_for(model, (8,), pipeline, chains=C)
+        assert_contract(contract, lowered_text=low.as_text(),
+                        compiled_text=low.compile().as_text(),
+                        where=f"{pipeline} no-chain-axis")
+        print(pipeline, "bitwise + census ok")
+
+    # chain mesh axis: ("chain", 2) x ("data", 4) — each 4-shard group
+    # sweeps ONE local chain, bitwise the 4-shard single-chain run
+    C = 2
+    mesh = make_mesh((2, 4), ("chain", "data"))
+    m4 = make_mesh((4,), ("data",))
+    keys = gibbs.chain_keys(11, C)
+    st0 = gibbs.init_state(model, data, 11, key=keys[0])
+    fn, ds, ss = make_distributed_step(model, m4, data, st0, "eager")
+    dd = jax.device_put(data, ds)
+    indep = []
+    for k in keys:
+        st = jax.device_put(
+            gibbs.init_state(model, data, 11, key=k), ss)
+        for _ in range(SW):
+            st, m = fn(dd, st)
+        indep.append(jax.tree.map(np.asarray, st))
+    stacked = gibbs.stack_states(
+        gibbs.init_chain_states(model, data, 11, C))
+    mfn, mds, mss = make_multi_chain_step(model, mesh, data, stacked,
+                                          "eager", chains=C,
+                                          chain_axis="chain")
+    stk = jax.device_put(stacked, mss)
+    for _ in range(SW):
+        stk, mm = mfn(jax.device_put(data, mds), stk)
+    stk = jax.tree.map(np.asarray, stk)
+    for c in range(C):
+        assert leaves_equal(gibbs.unstack_state(stk, c), indep[c]), c
+    low = mfn.lower(data, stacked)
+    contract = contract_for(model, (2, 4), "eager", chains=C,
+                            chain_axis_size=2)
+    assert contract.n_shards == 4 and contract.chains == 1
+    assert_contract(contract, lowered_text=low.as_text(),
+                    compiled_text=low.compile().as_text(),
+                    where="chain-axis")
+    print("chain-axis bitwise + census ok")
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_multi_chain_distributed_bitwise_and_census_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _MC_DISTRIBUTED_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout

@@ -34,7 +34,10 @@ def test_bmf_adaptive_noise_finds_alpha():
     sess = TrainSession(num_latent=4, burnin=60, nsamples=40, seed=0)
     sess.add_train_and_test(mat, test=test, noise=AdaptiveGaussian())
     res = sess.run()
-    alpha = float(res.state.noises[0]["alpha"])
+    # chain 0's draw — state gains a leading (C,) axis under
+    # REPRO_CHAINS>1 (the CI chains4 leg runs this file that way)
+    alpha = float(np.atleast_1d(np.asarray(
+        res.state.noises[0]["alpha"]))[0])
     # true precision = 1/0.25 = 4
     assert 2.0 < alpha < 7.0, alpha
     assert res.rmse_test < 0.75
