@@ -34,6 +34,8 @@ import numpy as np
 from repro.core import (AdaptiveGaussian, ModelBuilder,
                         PredictSession, from_coo)
 from repro.launch.serve import RecommendServer
+from repro.obs import (Histogram, clock, latency_buckets,
+                       percentile_summary)
 
 from .common import emit
 
@@ -67,7 +69,8 @@ def _drive(session: PredictSession, F: np.ndarray, obs: np.ndarray,
            qps: float, n_requests: int, slots: int, seed: int):
     """One offered-QPS level: open-loop arrivals, full drain.
 
-    Returns (latencies sorted asc, achieved qps, mean batch size).
+    Returns (client-latency Histogram, achieved qps, the server's
+    ``metrics_snapshot()`` for the timed region).
     """
     rng = np.random.default_rng(seed)
     n_users = F.shape[0]
@@ -86,12 +89,12 @@ def _drive(session: PredictSession, F: np.ndarray, obs: np.ndarray,
             srv.submit(user=u)
         srv.run()
     srv.done.clear()
+    srv.obs.reset()     # drop the warm-up's latency observations too
 
-    batch_sizes = []
     submitted = 0
-    t0 = time.monotonic()
+    t0 = clock.monotonic()
     while len(srv.done) < n_requests:
-        now = time.monotonic() - t0
+        now = clock.monotonic() - t0
         while submitted < n_requests and arrivals[submitted] <= now:
             u = int(users[submitted])
             if kinds[submitted] < 0.1:
@@ -102,18 +105,20 @@ def _drive(session: PredictSession, F: np.ndarray, obs: np.ndarray,
                            req_id=f"q{submitted}")
             submitted += 1
         srv._admit()
-        live = sum(r is not None for r in srv.active)
-        if live:
-            batch_sizes.append(live)
+        if any(r is not None for r in srv.active):
             srv.step()
         elif submitted < n_requests:
             time.sleep(min(1e-3, arrivals[submitted] - now))
-    t_end = time.monotonic()
+    t_end = clock.monotonic()
 
-    lat = np.sort([d["t_done"] - (t0 + arrivals[int(d["id"][1:])])
-                   for d in srv.done])
+    # client-perceived latency (scheduled arrival -> completion,
+    # queueing included) through the shared obs histogram — the same
+    # percentile implementation the server's own snapshot uses
+    lat = Histogram(latency_buckets(lo=1e-5))
+    for d in srv.done:
+        lat.observe(d["t_done"] - (t0 + arrivals[int(d["id"][1:])]))
     achieved = n_requests / (t_end - t0)
-    return lat, achieved, float(np.mean(batch_sizes))
+    return lat, achieved, srv.metrics_snapshot()
 
 
 def run(quick: bool = False, out: str | None = None,
@@ -131,10 +136,13 @@ def run(quick: bool = False, out: str | None = None,
 
     levels = []
     for qps in qps_levels:
-        lat, achieved, mean_batch = _drive(
+        lat, achieved, snap = _drive(
             session, F, obs, qps, n_requests, slots, seed=int(qps))
-        p50 = float(lat[int(0.50 * (len(lat) - 1))])
-        p99 = float(lat[int(0.99 * (len(lat) - 1))])
+        p50 = lat.percentile(0.50)
+        p99 = lat.percentile(0.99)
+        occ = Histogram.from_dict(
+            snap["histograms"]["serve.batch_occupancy"])
+        mean_batch = occ.mean()
         levels.append({
             "offered_qps": qps,
             "achieved_qps": round(achieved, 2),
@@ -142,6 +150,15 @@ def run(quick: bool = False, out: str | None = None,
             "p99_latency_s": round(p99, 5),
             "mean_batch": round(mean_batch, 2),
             "n_requests": n_requests,
+            "server_metrics": {
+                name.split(".", 1)[1]: {
+                    k: round(v, 5) if isinstance(v, float) else v
+                    for k, v in percentile_summary(
+                        Histogram.from_dict(
+                            snap["histograms"][name])).items()}
+                for name in ("serve.queue_wait_s", "serve.execute_s")
+            } | {"completed": int(snap["counters"]
+                                  .get("serve.completed", 0))},
         })
         emit("serving", f"qps_{qps:g}",
              f"{p50 * 1e3:.2f}/{p99 * 1e3:.2f}", "ms p50/p99",

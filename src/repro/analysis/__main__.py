@@ -7,6 +7,9 @@ Usage::
     python -m repro.analysis path1.py dir2/     # lint specific paths
     python -m repro.analysis --rules batch-rng-in-sweep-path
     python -m repro.analysis --contracts results/dryrun
+    python -m repro.analysis --obs results/obs  # schema-audit
+                                                # committed obs
+                                                # trace/metrics samples
     python -m repro.analysis --kernels          # Pallas kernel
                                                 # contract verifier
     python -m repro.analysis --kernels fix1.py  # verify standalone
@@ -33,6 +36,7 @@ from . import invariants
 # repo root when run from a source checkout (…/src/repro/analysis)
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 _DEFAULT_DRYRUN = _REPO_ROOT / "results" / "dryrun"
+_DEFAULT_OBS = _REPO_ROOT / "results" / "obs"
 
 
 def main(argv=None) -> int:
@@ -54,6 +58,11 @@ def main(argv=None) -> int:
         help="audit dry-run JSONs in DIR against freshly derived "
              "contracts (given alone, skips the lint pass); the "
              "no-argument invocation audits results/dryrun if present")
+    ap.add_argument(
+        "--obs", metavar="DIR", type=Path, default=None,
+        help="schema-audit committed repro.obs trace/metrics JSONs in "
+             "DIR (given alone, skips the lint pass); the no-argument "
+             "invocation audits results/obs if present")
     ap.add_argument(
         "--kernels", action="store_true",
         help="run the Pallas kernel contract verifier over the "
@@ -82,6 +91,7 @@ def main(argv=None) -> int:
 
     findings = []           # Finding objects
     contract_msgs = []      # plain strings from the contract audit
+    obs_msgs = []           # plain strings from the obs schema audit
 
     if args.kernels:
         from . import kernelcheck
@@ -91,14 +101,15 @@ def main(argv=None) -> int:
         else:
             findings.extend(kernelcheck.check_kernels(rules=rules))
     else:
-        run_lint = bool(args.paths) or args.contracts is None
+        run_lint = bool(args.paths) or (
+            args.contracts is None and args.obs is None)
         if run_lint:
             findings.extend(
                 invariants.lint_paths(args.paths or None, rules))
 
         contracts_dir = args.contracts
         if contracts_dir is None and not args.paths \
-                and _DEFAULT_DRYRUN.is_dir():
+                and args.obs is None and _DEFAULT_DRYRUN.is_dir():
             contracts_dir = _DEFAULT_DRYRUN
         if contracts_dir is not None:
             from .contract import dryrun_contract_findings
@@ -110,7 +121,21 @@ def main(argv=None) -> int:
                 for msg in dryrun_contract_findings(j):
                     contract_msgs.append((j, msg))
 
-    n = len(findings) + len(contract_msgs)
+        obs_dir = args.obs
+        if obs_dir is None and not args.paths \
+                and args.contracts is None and _DEFAULT_OBS.is_dir():
+            obs_dir = _DEFAULT_OBS
+        if obs_dir is not None:
+            from .obsschema import obs_schema_findings
+            jsons = sorted(Path(obs_dir).glob("*.json"))
+            if not jsons:
+                print(f"{obs_dir}: no obs JSONs to audit",
+                      file=sys.stderr)
+            for j in jsons:
+                for msg in obs_schema_findings(j):
+                    obs_msgs.append((j, msg))
+
+    n = len(findings) + len(contract_msgs) + len(obs_msgs)
     if args.json:
         recs = [{"path": f.path, "line": f.line, "rule": f.rule,
                  "message": f.message, "hint": f.hint}
@@ -120,11 +145,18 @@ def main(argv=None) -> int:
                   "hint": "regenerate via python -m "
                           "repro.launch.mf_dryrun"}
                  for j, msg in contract_msgs]
+        recs += [{"path": str(j), "line": 0, "rule": "obs-schema",
+                  "message": msg,
+                  "hint": "regenerate via python "
+                          "scripts_dev/gen_obs_samples.py"}
+                 for j, msg in obs_msgs]
         print(_json.dumps({"findings": recs, "count": n}, indent=1))
     else:
         for f in findings:
             print(f.format())
         for _, msg in contract_msgs:
+            print(msg)
+        for _, msg in obs_msgs:
             print(msg)
 
     print(f"repro.analysis: {n} finding(s)", file=sys.stderr)

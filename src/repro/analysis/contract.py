@@ -154,6 +154,36 @@ def contract_for(model, mesh_shape: Sequence[int],
         chains=local)
 
 
+def contract_wire_bytes(model, contract: CommContract) -> int:
+    """Estimated bytes RECEIVED per device per sweep under ``contract``.
+
+    The number the obs subsystem stamps into every sweep span
+    (``args.bytes_on_wire``), so traces carry the expected collective
+    volume next to the measured wall time.  Derivation, per shard:
+
+    * fixed-factor exchange — eager all-gather and ring ppermute move
+      the same total: each entity's full factor minus the shard's own
+      rows, ``n_rows * K * itemsize * (S-1)/S``, once per local chain;
+    * all-reduces — ``all_reduces`` ops (already scaled by local
+      chains) of at most ``max_reduce_elems`` f32 elements each, ring
+      cost ``(S-1)/S`` per pass (one-pass estimate: an upper bound on
+      payload, a lower bound on passes — collectives on real fabrics
+      are within a small factor either way).
+
+    ``S == 1`` (or no mesh) → 0: nothing crosses a wire.
+    """
+    S = contract.n_shards
+    if S <= 1:
+        return 0
+    frac = (S - 1) / S
+    item = 2 if contract.wire_dtype == "bf16" else 4
+    fixed_elems = sum(e.n_rows * model.num_latent
+                      for e in model.entities)
+    exchange = fixed_elems * item * frac * contract.chains
+    reduces = contract.all_reduces * contract.max_reduce_elems * 4 * frac
+    return int(exchange + reduces)
+
+
 # ---------------------------------------------------------------------------
 # StableHLO check (pre-backend: exact op counts)
 # ---------------------------------------------------------------------------

@@ -300,7 +300,9 @@ def _check_nondeterminism(ctx: _Ctx) -> Iterable[Finding]:
                 node, "nondeterminism-in-core",
                 f"wall-clock read {func_src}(...)",
                 "core/ results must be a pure function of (model, "
-                "data, seed); move timing to launch/ or tests")
+                "data, seed); record timing through a repro.obs "
+                "Recorder span or obs.clock (only ever reported, "
+                "never fed back into a computation)")
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +346,65 @@ def _check_serving_loads(ctx: _Ctx) -> Iterable[Finding]:
             "__init__) and serve every request from the resident "
             "PosteriorCache; lazy streaming belongs in core/predict, "
             "not the server")
+
+
+# ---------------------------------------------------------------------------
+# rule 6: wall-clock timing goes through repro.obs
+# ---------------------------------------------------------------------------
+
+# the wall-clock readers obs.clock wraps; `time.sleep` is not a read
+_WALL_CLOCK_FNS = ("time", "time_ns", "perf_counter", "perf_counter_ns",
+                   "monotonic", "monotonic_ns", "process_time",
+                   "process_time_ns", "thread_time", "thread_time_ns")
+_TIME_ATTR_RE = re.compile(
+    r"(?:^|\.)time\.(?:" + "|".join(_WALL_CLOCK_FNS) + r")$")
+
+
+@rule(
+    "timing-outside-obs",
+    "wall-clock reads (time.perf_counter / time.monotonic / ...) "
+    "outside repro/obs — route timing through the obs subsystem "
+    "(Recorder spans, or obs.clock for bare durations)",
+    "PR 10: Session.run's inline perf_counter pair charged jit "
+    "compilation to sweep time and SlotServer stamped raw monotonic "
+    "dicts nothing else could read; centralizing timing in repro.obs "
+    "makes instrumentation uniform, no-op when disabled, and provably "
+    "outside jitted code — scattered ad-hoc timers are how those "
+    "regressions crept in unnoticed",
+)
+def _check_timing_outside_obs(ctx: _Ctx) -> Iterable[Finding]:
+    # obs/ IS the sanctioned home; core/ clock reads are already
+    # findings under the stricter nondeterminism-in-core rule (one
+    # finding per defect, not two)
+    if ctx.relpath.startswith(("obs/", "core/")):
+        return
+    hint = ("time a span with repro.obs.Recorder (complete()/span()) "
+            "so it lands in traces and metrics, or import the bare "
+            "clock from repro.obs (obs.clock.perf_counter / "
+            "obs.clock.monotonic) for a plain duration")
+    # direct-call aliases: `from time import perf_counter [as pc]`
+    aliases = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for a in node.names:
+                if a.name in _WALL_CLOCK_FNS:
+                    aliases[a.asname or a.name] = a.name
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func_src = ast.unparse(node.func)
+        if _TIME_ATTR_RE.search(func_src):
+            yield ctx.finding(
+                node, "timing-outside-obs",
+                f"wall-clock read {func_src}(...) outside repro/obs",
+                hint)
+        elif isinstance(node.func, ast.Name) and \
+                node.func.id in aliases:
+            yield ctx.finding(
+                node, "timing-outside-obs",
+                f"wall-clock read {node.func.id}(...) (from time "
+                f"import {aliases[node.func.id]}) outside repro/obs",
+                hint)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,8 @@ from typing import Any, List, Optional
 import jax
 import numpy as np
 
+from ..obs import resolve_recorder
+
 
 def _flatten(tree: Any):
     leaves, treedef = jax.tree.flatten(tree)
@@ -102,12 +104,18 @@ class CheckpointManager:
     checkpoints which only need the last few.
     """
 
-    def __init__(self, directory: str, keep: Optional[int] = 3):
+    def __init__(self, directory: str, keep: Optional[int] = 3,
+                 recorder: Any = None):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # obs: save/restore durations, queue depth, bytes written.
+        # The session passes its own Recorder down so checkpoint spans
+        # land in the run's trace; standalone managers resolve a fresh
+        # one (enabled iff REPRO_OBS=1).
+        self.obs = resolve_recorder(recorder)
 
     def _raise_pending(self) -> None:
         """Re-raise an exception captured on the saver thread.
@@ -139,10 +147,17 @@ class CheckpointManager:
         # materialize on host *before* handing to the thread so the
         # device buffers can be donated/freed by the train loop
         host = jax.tree.map(np.asarray, tree)
+        nbytes = sum(int(x.nbytes) for x in jax.tree.leaves(host))
 
         def work():
+            t0 = self.obs.now()
             save_pytree(host, os.path.join(self.dir, f"step_{step}"))
             self._gc()
+            self.obs.complete("ckpt/save", t0, cat="ckpt", step=step,
+                              bytes=nbytes)
+            self.obs.observe("ckpt.save_s", self.obs.now() - t0)
+            self.obs.add("ckpt.saves")
+            self.obs.add("ckpt.bytes_written", nbytes)
 
         if blocking:
             work()
@@ -153,6 +168,9 @@ class CheckpointManager:
                 except BaseException as e:  # noqa: BLE001 — must not die silently
                     self._error = e
 
+            # queue depth gauge: one outstanding background save max
+            # (save() always wait()s first); 1 while in flight
+            self.obs.gauge("ckpt.queue_depth", 1)
             self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
 
@@ -160,6 +178,7 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+            self.obs.gauge("ckpt.queue_depth", 0)
         self._raise_pending()
 
     def restore_latest(self, template: Any):
@@ -168,16 +187,26 @@ class CheckpointManager:
         step = latest_step(self.dir)
         if step is None:
             return None
-        return step, load_pytree(template,
-                                 os.path.join(self.dir, f"step_{step}"))
+        t0 = self.obs.now()
+        tree = load_pytree(template,
+                           os.path.join(self.dir, f"step_{step}"))
+        self.obs.complete("ckpt/restore", t0, cat="ckpt", step=step)
+        self.obs.observe("ckpt.restore_s", self.obs.now() - t0)
+        self.obs.add("ckpt.restores")
+        return step, tree
 
     def restore_step(self, template: Any, step: int) -> Any:
         """Load one specific saved step (multi-chain resume restores
         every chain at the HIGHEST COMMON step, not each chain's own
         latest — an interrupted run may have chains one save apart)."""
         self.wait()
-        return load_pytree(template,
+        t0 = self.obs.now()
+        tree = load_pytree(template,
                            os.path.join(self.dir, f"step_{step}"))
+        self.obs.complete("ckpt/restore", t0, cat="ckpt", step=step)
+        self.obs.observe("ckpt.restore_s", self.obs.now() - t0)
+        self.obs.add("ckpt.restores")
+        return tree
 
     def all_steps(self) -> List[int]:
         return list_steps(self.dir)

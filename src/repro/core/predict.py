@@ -32,6 +32,7 @@ concurrent requests onto.
 from __future__ import annotations
 
 import os
+from collections import OrderedDict
 from typing import (Any, Dict, Iterator, List, NamedTuple, Optional,
                     Sequence, Tuple, Union)
 
@@ -145,10 +146,24 @@ class PredictAccumulator:
 # PredictSession pointed at the same store shares one parsed spec
 # instead of re-reading the JSON per instance (a store is written once
 # by the training session; mtime invalidates the entry if it IS
-# rewritten, e.g. by a resumed chain).
-_SPEC_CACHE: Dict[str, Tuple[float, dict]] = {}
+# rewritten, e.g. by a resumed chain).  Bounded LRU: a long-lived
+# server cycling through many stores (mtime-keyed entries used to
+# accumulate FOREVER) now evicts least-recently-used specs past
+# _SPEC_CACHE_MAX.
+_SPEC_CACHE: "OrderedDict[str, Tuple[float, dict]]" = OrderedDict()
+_SPEC_CACHE_MAX = 64
+_SPEC_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 DEFAULT_CACHE_BYTES = 1 << 30    # 1 GiB of stacked posterior samples
+
+
+def spec_cache_stats() -> dict:
+    """Counters + occupancy of the module-level model.json spec cache
+    (part of ``PredictSession.cache_stats()``)."""
+    out = dict(_SPEC_CACHE_STATS)
+    out["size"] = len(_SPEC_CACHE)
+    out["max_size"] = _SPEC_CACHE_MAX
+    return out
 
 
 def _load_spec_cached(path: str) -> dict:
@@ -161,9 +176,16 @@ def _load_spec_cached(path: str) -> dict:
         return load_model_spec(path)
     hit = _SPEC_CACHE.get(key)
     if hit is not None and hit[0] == mtime:
+        _SPEC_CACHE_STATS["hits"] += 1
+        _SPEC_CACHE.move_to_end(key)
         return hit[1]
+    _SPEC_CACHE_STATS["misses"] += 1
     spec = load_model_spec(path)
     _SPEC_CACHE[key] = (mtime, spec)
+    _SPEC_CACHE.move_to_end(key)
+    while len(_SPEC_CACHE) > _SPEC_CACHE_MAX:
+        _SPEC_CACHE.popitem(last=False)
+        _SPEC_CACHE_STATS["evictions"] += 1
     return spec
 
 
@@ -192,6 +214,11 @@ class PosteriorCache(NamedTuple):
     def hyper_at(self, entity: int, s: int):
         """Entity ``entity``'s hyper pytree of retained sample ``s``."""
         return jax.tree.map(lambda x: x[s], self.hypers[entity])
+
+    def nbytes(self) -> int:
+        """Actual resident bytes of the stacked cache (all leaves)."""
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for x in jax.tree.leaves((self.factors, self.hypers)))
 
 
 class RecResult(NamedTuple):
@@ -267,7 +294,9 @@ class PredictSession:
     def __init__(self, save_dir: str,
                  cache_bytes: Optional[int] = None,
                  require_converged: Union[bool, str] = False,
-                 rhat_threshold: Optional[float] = None):
+                 rhat_threshold: Optional[float] = None,
+                 recorder: Any = None):
+        from ..obs import resolve_recorder
         from ..checkpoint.ckpt import list_steps
         from .diagnostics import load_diagnostics
         from .modelspec import (MODEL_SPEC_FILE, SAMPLES_SUBDIR,
@@ -303,6 +332,13 @@ class PredictSession:
         self.cache_bytes = _resolve_cache_bytes(cache_bytes)
         self.load_count = 0          # checkpoint loads, ever
         self._cache: Optional[PosteriorCache] = None
+        # obs: request-level hit/miss on the resident cache (a hit =
+        # warm_cache found the store already resident; a miss = a load
+        # or an over-budget refusal that fell back to streaming)
+        self.obs = resolve_recorder(recorder)
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._cache_over_budget = 0
         self.diagnostics = load_diagnostics(save_dir)
         if require_converged:
             self._check_converged(require_converged, rhat_threshold)
@@ -408,25 +444,57 @@ class PredictSession:
         ``launch/serve.py``).
         """
         if self._cache is not None:
+            self._cache_hits += 1
+            self.obs.add("predict.cache_hit")
             return self._cache
+        self._cache_misses += 1
+        self.obs.add("predict.cache_miss")
         if self.store_nbytes() > self.cache_bytes:
+            # the cache's only "eviction": an all-or-nothing refusal
+            # to go resident (there is no partial LRU over samples)
+            self._cache_over_budget += 1
+            self.obs.add("predict.cache_over_budget")
             return None
         n_ent = len(self.model.entities)
-        fac: List[List[np.ndarray]] = [[] for _ in range(n_ent)]
-        hyp: List[List[Any]] = [[] for _ in range(n_ent)]
-        for st in self.samples():
-            for e in range(n_ent):
-                fac[e].append(np.asarray(st.factors[e]))
-                hyp[e].append(st.hypers[e])
-        factors = tuple(jnp.asarray(np.stack(f)) for f in fac)
-        hypers = tuple(
-            jax.tree.map(
-                lambda *xs: jnp.asarray(np.stack(
-                    [np.asarray(x) for x in xs])), *h)
-            for h in hyp)
-        self._cache = PosteriorCache(factors, hypers,
-                                     self.num_samples)
+        with self.obs.span("predict/warm_cache", cat="predict",
+                           samples=self.num_samples):
+            fac: List[List[np.ndarray]] = [[] for _ in range(n_ent)]
+            hyp: List[List[Any]] = [[] for _ in range(n_ent)]
+            for st in self.samples():
+                for e in range(n_ent):
+                    fac[e].append(np.asarray(st.factors[e]))
+                    hyp[e].append(st.hypers[e])
+            factors = tuple(jnp.asarray(np.stack(f)) for f in fac)
+            hypers = tuple(
+                jax.tree.map(
+                    lambda *xs: jnp.asarray(np.stack(
+                        [np.asarray(x) for x in xs])), *h)
+                for h in hyp)
+            self._cache = PosteriorCache(factors, hypers,
+                                         self.num_samples)
+        self.obs.gauge("predict.cache_resident_bytes",
+                       self._cache.nbytes())
         return self._cache
+
+    def cache_stats(self) -> dict:
+        """Counters for the resident posterior cache + the module
+        spec cache (PR 10 satellite — observability for serving).
+
+        ``hits``/``misses`` count ``warm_cache()`` calls (every
+        request path goes through it): a miss is the initial load OR
+        an over-budget refusal that fell back to streaming.
+        """
+        return {
+            "hits": self._cache_hits,
+            "misses": self._cache_misses,
+            "over_budget": self._cache_over_budget,
+            "resident": self._cache is not None,
+            "resident_bytes": (self._cache.nbytes()
+                               if self._cache is not None else 0),
+            "budget_bytes": self.cache_bytes,
+            "load_count": self.load_count,
+            "spec_cache": spec_cache_stats(),
+        }
 
     def _factor_iter(self, entity: int) -> Iterator[jnp.ndarray]:
         """Entity factors per retained sample — from the cache when

@@ -43,7 +43,6 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
                     Sequence, Tuple, Union)
 
@@ -51,10 +50,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import clock, resolve_recorder
 from .blocks import (BlockDef, DenseBlock, EntityDef, ModelDef,
                      dense_block)
 from .diagnostics import (Diagnostics, compute_diagnostics,
-                          save_diagnostics)
+                          save_diagnostics, split_rhat)
 from .gibbs import (MFData, MFState, gibbs_step, init_chain_states,
                     init_state, multi_chain_step_jit, stack_states,
                     unstack_state)
@@ -124,6 +124,35 @@ class SessionResult:
     chain_blocks: Optional[List[List[BlockResult]]] = None
     diagnostics: Optional[Diagnostics] = None
     resumed_from: Optional[int] = None
+    # PR 10 split: ``runtime_s`` is sweep wall time ONLY; the one-time
+    # jit compilation (plus the discarded warm-up sweep that triggers
+    # it) lands here instead of silently inflating the first sweep.
+    compile_s: float = 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-able scalar summary of the run.
+
+        Keeps the ``runtime_s`` key (pre-PR-10 consumers read it; it
+        now means sweep time only) alongside the ``compile_s`` split;
+        ``total_s`` is their sum — what the old ``runtime_s`` used to
+        (approximately) report.
+        """
+        return {
+            "rmse_test": self.rmse_test,
+            "auc_test": self.auc_test,
+            "nsamples": self.nsamples,
+            "n_chains": self.n_chains,
+            "runtime_s": self.runtime_s,
+            "compile_s": self.compile_s,
+            "total_s": self.compile_s + self.runtime_s,
+            "rmse_train_trace": [float(v) for v in
+                                 self.rmse_train_trace],
+            "rmse_test_trace": [float(v) for v in self.rmse_test_trace],
+            "save_dir": self.save_dir,
+            "resumed_from": self.resumed_from,
+            "diagnostics": (self.diagnostics.to_dict()
+                            if self.diagnostics is not None else None),
+        }
 
     def mean_from_samples(self, test: TestSet, row_entity: int = 0,
                           col_entity: int = 1) -> np.ndarray:
@@ -482,7 +511,8 @@ class Session:
                  callbacks: Sequence[Callable[[SweepInfo], None]] = (),
                  init_transform: Optional[Callable[[MFState],
                                                    MFState]] = None,
-                 accumulate_factor_means: bool = False):
+                 accumulate_factor_means: bool = False,
+                 recorder: Any = None):
         self.model = model
         self.data = data
         self.tests = dict(tests or {})
@@ -508,6 +538,10 @@ class Session:
         self.callbacks = tuple(callbacks)
         self.init_transform = init_transform
         self.accumulate_factor_means = accumulate_factor_means
+        # None -> fresh per-run Recorder at run() time, enabled iff
+        # REPRO_OBS=1; an explicit Recorder is shared with the
+        # checkpoint savers and exported by the caller
+        self.recorder = recorder
         if save_freq and not save_dir:
             raise ValueError(
                 "save_freq > 0 streams posterior samples to disk; "
@@ -531,7 +565,7 @@ class Session:
         spec["run"] = self._run_spec(chain)
         save_model_spec(os.path.join(directory, MODEL_SPEC_FILE), spec)
 
-    def _make_savers(self):
+    def _make_savers(self, recorder=None):
         """One CheckpointManager per chain.
 
         ``chains == 1`` keeps the PR 5 layout exactly
@@ -547,13 +581,15 @@ class Session:
         if self.chains == 1:
             # keep=None: a posterior-sample store retains EVERY step
             return [CheckpointManager(
-                os.path.join(self.save_dir, SAMPLES_SUBDIR), keep=None)]
+                os.path.join(self.save_dir, SAMPLES_SUBDIR), keep=None,
+                recorder=recorder)]
         savers = []
         for c in range(self.chains):
             cdir = os.path.join(self.save_dir, chain_subdir(c))
             self._spec_at(cdir, chain=c)
             savers.append(CheckpointManager(
-                os.path.join(cdir, SAMPLES_SUBDIR), keep=None))
+                os.path.join(cdir, SAMPLES_SUBDIR), keep=None,
+                recorder=recorder))
         return savers
 
     def _restore(self, savers, state: MFState):
@@ -580,9 +616,49 @@ class Session:
 
     # -- run ---------------------------------------------------------------
 
+    def _wire_bytes(self) -> int:
+        """Contract-derived bytes-on-wire per device per sweep — the
+        ``args.bytes_on_wire`` annotation on every sweep span.  Pure
+        arithmetic over the ModelDef (``analysis.contract``); 0
+        without a mesh."""
+        # analysis imports the model zoo; keep it out of core's import
+        # graph until observability actually asks for it
+        from ..analysis.contract import contract_for, contract_wire_bytes
+        if self.mesh is None:
+            mesh_shape: Tuple[int, ...] = (1,)
+            chain_axis_size = None
+        else:
+            mesh_shape = tuple(int(s)
+                               for s in np.asarray(self.mesh.devices).shape)
+            chain_axis_size = (int(self.mesh.shape[self.chain_axis])
+                               if self.chain_axis is not None else None)
+        c = contract_for(self.model, mesh_shape, self.pipeline,
+                         chains=self.chains,
+                         chain_axis_size=chain_axis_size)
+        return contract_wire_bytes(self.model, c)
+
+    def _export_obs(self, rec) -> None:
+        """Write the run's trace + metrics snapshots when enabled.
+
+        Destination: ``REPRO_OBS_DIR`` if set, else ``save_dir/obs``
+        when the session streams samples; with neither there is
+        nowhere sensible to write and the caller owns the export
+        (``rec.write_trace(...)``)."""
+        if not rec.enabled:
+            return
+        dest = os.environ.get("REPRO_OBS_DIR")
+        if dest is None and self.save_dir:
+            dest = os.path.join(self.save_dir, "obs")
+        if dest is None:
+            return
+        rec.write_trace(os.path.join(dest, "train_trace.json"))
+        rec.write_metrics(os.path.join(dest, "train_metrics.json"))
+
     def run(self, keep_samples: bool = False,
             resume: bool = False) -> SessionResult:
         model, data = self.model, self.data
+        rec = resolve_recorder(self.recorder)
+        rec.set_kind("session")
         C = self.chains
         if C == 1:
             state = init_state(model, data, self.seed)
@@ -599,7 +675,7 @@ class Session:
         start = 0
         resumed_from: Optional[int] = None
         if self.save_freq:
-            savers = self._make_savers()
+            savers = self._make_savers(recorder=rec)
             if resume:
                 restored = self._restore(savers, state)
                 if restored is not None:
@@ -619,9 +695,26 @@ class Session:
                 self.chain_axis)
         accs = {bi: PredictAccumulator(ts)
                 for bi, ts in self.tests.items()}
-        # wall-clock only reports runtime; samples are unaffected
-        # repro-lint: disable=nondeterminism-in-core
-        t0 = time.perf_counter()
+        total = self.burnin + self.nsamples
+        # Compile split: trigger jit compilation with a DISCARDED
+        # warm-up sweep before the timed loop, so compile_s and
+        # runtime_s separate (the old single perf_counter pair charged
+        # compilation to sweep time).  ``step`` is pure (no donated
+        # buffers anywhere in gibbs/distributed), so running it once
+        # and dropping the result cannot perturb the chain — the
+        # recorded sweeps below start from the same (data, state).
+        compile_s = 0.0
+        if start < total:
+            t_c = clock.perf_counter()
+            warm = step(data, state)
+            jax.block_until_ready(warm)
+            del warm
+            compile_s = clock.perf_counter() - t_c
+            rec.complete("session/compile", t_c, cat="session",
+                         phase="compile")
+        obs_on = rec.enabled
+        bytes_on_wire = self._wire_bytes() if obs_on else 0
+        t0 = clock.perf_counter()
         n_blocks = len(model.blocks)
         train_traces: List[List[float]] = [[] for _ in range(n_blocks)]
         chain_train_traces: List[List[List[float]]] = [
@@ -639,9 +732,14 @@ class Session:
         # feeding split-R-hat / bulk-ESS at the end of the run
         diag_traces: Dict[str, List[np.ndarray]] = {}
 
-        total = self.burnin + self.nsamples
         for sweep in range(start, total):
+            if obs_on:
+                t_sweep = rec.now()
             state, metrics = step(data, state)
+            if obs_on:
+                # fence: device time for THIS sweep, not dispatch time
+                jax.block_until_ready((state, metrics))
+                t_done = rec.now()
             for bi in range(n_blocks):
                 arr = np.atleast_1d(
                     np.asarray(metrics[f"rmse_train_{bi}"]))
@@ -694,6 +792,24 @@ class Session:
                     else:
                         for c, sv in enumerate(savers):
                             sv.save(sweep + 1, unstack_state(state, c))
+            if obs_on:
+                span_args = {
+                    "sweep": sweep,
+                    "phase": "sample" if in_sampling else "burnin",
+                    "stage": "first" if sweep == start else "steady",
+                    "bytes_on_wire": bytes_on_wire,
+                }
+                tr = diag_traces.get("rmse_train_0")
+                if tr:
+                    # streaming convergence: split-R-hat over the
+                    # post-burnin draws so far (nan below MIN_DRAWS)
+                    rhat = split_rhat(np.stack(tr, axis=1))
+                    if np.isfinite(rhat):
+                        span_args["rhat_rmse_train_0"] = rhat
+                rec.complete("sweep", t_sweep, end=t_done,
+                             cat="session", **span_args)
+                rec.observe("session.sweep_s", t_done - t_sweep)
+                rec.add("session.sweeps")
             if self.verbose and (sweep % max(1, total // 20) == 0):
                 ph = "burnin" if sweep < self.burnin else "sample"
                 print(f"[{ph} {sweep:4d}] rmse_train="
@@ -717,8 +833,7 @@ class Session:
             if savers:
                 save_diagnostics(self.save_dir, diag)
 
-        # repro-lint: disable=nondeterminism-in-core
-        runtime = time.perf_counter() - t0
+        runtime = clock.perf_counter() - t0
         names = model.entity_names
         block_results: List[BlockResult] = []
         head: Optional[BlockResult] = None
@@ -766,6 +881,8 @@ class Session:
                     "sweeps, not additional ones: raise nsamples to "
                     "extend the chain, or rerun without resume=True.")
             means = [np.asarray(s / max(n_acc, 1)) for s in sums]
+        rec.gauge("session.chains", C)
+        self._export_obs(rec)
         return SessionResult(
             rmse_test=head.rmse_test,
             auc_test=head.auc_test,
@@ -775,6 +892,7 @@ class Session:
             rmse_test_trace=head.rmse_test_trace,
             nsamples=self.nsamples,
             runtime_s=runtime,
+            compile_s=compile_s,
             state=state,
             samples=samples if keep_samples else None,
             blocks=block_results,
@@ -813,11 +931,13 @@ class TrainSession:
                  mesh: Any = None, pipeline: Optional[str] = None,
                  chains: Optional[int] = None,
                  chain_axis: Optional[str] = None,
-                 callbacks: Sequence[Callable[[SweepInfo], None]] = ()):
+                 callbacks: Sequence[Callable[[SweepInfo], None]] = (),
+                 recorder: Any = None):
         self.num_latent = num_latent
         self.burnin = burnin
         self.nsamples = nsamples
         self.seed = seed
+        self.recorder = recorder
         self.prior_names = tuple(p.replace("-", "").replace("_", "")
                                  for p in priors)
         self.use_pallas = use_pallas
@@ -903,7 +1023,8 @@ class TrainSession:
             mesh=self.mesh, pipeline=self.pipeline,
             chains=self.chains, chain_axis=self.chain_axis,
             save_freq=self.save_freq, save_dir=self.save_dir,
-            verbose=self.verbose, callbacks=self.callbacks)
+            verbose=self.verbose, callbacks=self.callbacks,
+            recorder=self.recorder)
         return sess.run(keep_samples=keep_samples, resume=resume)
 
 
@@ -934,8 +1055,10 @@ class GFASession:
                  chains: Optional[int] = None,
                  chain_axis: Optional[str] = None,
                  save_freq: int = 0, save_dir: Optional[str] = None,
-                 callbacks: Sequence[Callable[[SweepInfo], None]] = ()):
+                 callbacks: Sequence[Callable[[SweepInfo], None]] = (),
+                 recorder: Any = None):
         self.views = [np.asarray(v, np.float32) for v in views]
+        self.recorder = recorder
         self.num_latent = num_latent
         self.burnin = burnin
         self.nsamples = nsamples
@@ -984,7 +1107,7 @@ class GFASession:
             mesh=self.mesh, pipeline=self.pipeline,
             chains=self.chains, chain_axis=self.chain_axis,
             save_freq=self.save_freq, save_dir=self.save_dir,
-            callbacks=self.callbacks,
+            callbacks=self.callbacks, recorder=self.recorder,
             init_transform=(self._zero_loadings
                             if self.zero_init_loadings else None),
             accumulate_factor_means=True)
@@ -1014,6 +1137,7 @@ class GFASession:
         out.update({
             "rmse_train": [b.rmse_train_trace for b in r.blocks],
             "runtime_s": r.runtime_s,
+            "compile_s": r.compile_s,
             "state": r.state,
             "diagnostics": r.diagnostics,
             "result": r,

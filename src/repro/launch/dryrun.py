@@ -27,7 +27,7 @@ Usage:
 """
 import argparse
 import json
-import time
+from ..obs import clock
 import traceback
 from pathlib import Path
 
@@ -67,7 +67,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, n_micro: int = 1,
     if skip is not None:
         return {"arch": arch, "shape": shape_name, "skipped": skip}
 
-    t0 = time.perf_counter()
+    t0 = clock.perf_counter()
     with compat.use_mesh(mesh):
         if shape.kind == "train":
             nm = max(n_micro, _default_micro(arch))
@@ -89,9 +89,9 @@ def lower_cell(arch: str, shape_name: str, mesh, *, n_micro: int = 1,
             caches_abs = S.abstract_serve_cache(cfg, shape)
             lowered = step.lower(params_abs, caches_abs,
                                  S.serve_token_spec(cfg, shape))
-        t_lower = time.perf_counter() - t0
+        t_lower = clock.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.perf_counter() - t0 - t_lower
+        t_compile = clock.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = xla_cost_analysis(compiled)      # list-vs-dict normalized

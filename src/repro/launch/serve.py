@@ -28,7 +28,6 @@ call that creeps into this module outside ``__init__``/``warm*``.
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -39,6 +38,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..models import (forward, init_model, init_serve_cache, serve_step)
 from ..models.config import ModelConfig
 from ..models.transformer import encode
+from ..obs import Recorder, clock, integer_buckets
 from . import specs as S
 
 
@@ -142,12 +142,21 @@ class SlotServer:
     previous ``f"r{len(self.queue)}"`` default reused ids once the
     queue drained, so two live requests could share one.  Explicit ids
     that clash with a queued or active request raise, naming both.
-    Every request carries ``t_submit``/``t_done`` monotonic timestamps
-    (benchmarks/serve_latency.py derives its p50/p99 from them).
+    Every request carries ``t_submit``/``t_admit``/``t_done``
+    monotonic timestamps (benchmarks/serve_latency.py derives its
+    p50/p99 from them), and the server's ``obs`` Recorder splits
+    request latency into the ``serve.queue_wait_s`` and
+    ``serve.execute_s`` histograms plus a per-step
+    ``serve.batch_occupancy`` histogram — all exposed through
+    :meth:`metrics_snapshot`.  The recorder is enabled by default
+    (metrics are the serving product, not a debug artifact); inject a
+    disabled one via ``recorder=`` to opt out.
     """
 
-    def __init__(self, slots: int):
+    def __init__(self, slots: int, recorder: Optional[Recorder] = None):
         self.slots = slots
+        self.obs = Recorder(enabled=True) if recorder is None else recorder
+        self.obs.set_kind("serve")
         self.queue: List[Dict[str, Any]] = []
         self.active: List[Optional[Dict[str, Any]]] = [None] * slots
         self.done: List[Dict[str, Any]] = []
@@ -166,22 +175,43 @@ class SlotServer:
                 "unique id or omit req_id to get a server-assigned "
                 "one")
         req["id"] = req_id
-        req["t_submit"] = time.monotonic()
+        req["t_submit"] = clock.monotonic()
         self._live_ids.add(req_id)
         self.queue.append(req)
+        self.obs.add("serve.submitted")
         return req_id
 
     def _admit(self):
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                self.active[s] = self.queue.pop(0)
+                req = self.queue.pop(0)
+                req["t_admit"] = clock.monotonic()
+                self.obs.observe("serve.queue_wait_s",
+                                 req["t_admit"] - req["t_submit"])
+                self.active[s] = req
+
+    def _observe_batch(self, occupancy: int) -> None:
+        """Batch-occupancy histogram, one observation per service
+        step — integer buckets so every occupancy level 0..slots has
+        its own exact count."""
+        self.obs.observe("serve.batch_occupancy", occupancy,
+                         bounds=integer_buckets(self.slots))
 
     def _finish(self, slot: int):
         req = self.active[slot]
-        req["t_done"] = time.monotonic()
+        req["t_done"] = clock.monotonic()
+        self.obs.observe("serve.execute_s",
+                         req["t_done"] - req["t_admit"])
+        self.obs.add("serve.completed")
         self._live_ids.discard(req["id"])
         self.done.append(req)
         self.active[slot] = None
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """JSON metrics snapshot of the server's Recorder: submitted/
+        completed counters + queue-wait / execute / batch-occupancy
+        histograms (the numbers benchmarks/serve_latency.py reports)."""
+        return self.obs.metrics()
 
     def step(self):                       # pragma: no cover
         raise NotImplementedError
@@ -205,8 +235,9 @@ class BatchedServer(SlotServer):
     """
 
     def __init__(self, cfg: ModelConfig, params, slots: int = 4,
-                 max_len: int = 256):
-        super().__init__(slots)
+                 max_len: int = 256,
+                 recorder: Optional[Recorder] = None):
+        super().__init__(slots, recorder=recorder)
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -223,6 +254,7 @@ class BatchedServer(SlotServer):
 
     def step(self):
         """One decode step advancing every active slot."""
+        self._observe_batch(sum(r is not None for r in self.active))
         toks = np.zeros((self.slots, 1), np.int32)
         for s, req in enumerate(self.active):
             if req is None:
@@ -267,8 +299,8 @@ class RecommendServer(SlotServer):
     """
 
     def __init__(self, session, slots: int = 8, k: int = 10,
-                 block=0):
-        super().__init__(slots)
+                 block=0, recorder: Optional[Recorder] = None):
+        super().__init__(slots, recorder=recorder)
         self.session = session
         self.k = int(k)
         self.block = block
@@ -313,6 +345,8 @@ class RecommendServer(SlotServer):
         """Score every active request in one batched kernel call."""
         live = [(s, r) for s, r in enumerate(self.active)
                 if r is not None]
+        self._observe_batch(len(live))
+        t_step = self.obs.now()
         rows = []
         for _, req in live:
             if req["user"] is not None:
@@ -335,3 +369,5 @@ class RecommendServer(SlotServer):
             req["mean"] = res.mean[b, :kk].copy()
             req["std"] = res.std[b, :kk].copy()
             self._finish(s)
+        self.obs.complete("serve/step", t_step, cat="serve",
+                          batch=len(live))

@@ -11,7 +11,7 @@ pipeline, checkpoint/auto-resume, straggler monitor, failure-restart.
 from __future__ import annotations
 
 import functools
-import time
+from ..obs import clock
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -134,7 +134,7 @@ def train(cfg: ModelConfig, *, steps: int = 100, batch: int = 8,
             start, (params, opt_state) = restored
 
     losses = []
-    t0 = time.perf_counter()
+    t0 = clock.perf_counter()
     i = start
     while i < steps:
         try:
@@ -146,9 +146,9 @@ def train(cfg: ModelConfig, *, steps: int = 100, batch: int = 8,
                 d_model=cfg.d_model,
                 enc_frames=cfg.encoder_frames
                 if cfg.is_encoder_decoder else 0)
-            ts = time.perf_counter()
+            ts = clock.perf_counter()
             params, opt_state, m = step_fn(params, opt_state, b)
-            mon.record(time.perf_counter() - ts)
+            mon.record(clock.perf_counter() - ts)
             losses.append(float(m["loss"]))
             if log_every and i % log_every == 0:
                 print(f"step {i:5d}  loss {losses[-1]:.4f}  "
@@ -173,5 +173,5 @@ def train(cfg: ModelConfig, *, steps: int = 100, batch: int = 8,
     if mgr is not None:
         mgr.wait()
     return {"losses": losses, "params": params, "opt_state": opt_state,
-            "runtime_s": time.perf_counter() - t0,
+            "runtime_s": clock.perf_counter() - t0,
             "final_step": i}

@@ -1,0 +1,30 @@
+"""The sanctioned wall-clock import point for the repro tree.
+
+Every other module is banned from calling ``time.perf_counter`` /
+``time.monotonic`` directly (lint rule ``timing-outside-obs``; in
+``core/`` the stricter ``nondeterminism-in-core`` applies): ad-hoc
+timing scattered through the runtime is how PR 10 found compile time
+silently charged to sweep time and three half-compatible latency
+stamps in the serving layer.  Timing flows through this module — via
+:class:`~repro.obs.recorder.Recorder` spans for anything that should
+land in traces/metrics, or these bare re-exports for the few places
+that only need a duration (dry-run lowering/compile splits).
+
+Nothing here may feed back into a computation: wall-clock values are
+only ever *reported*, which is what keeps sampled chains bitwise
+invariant to instrumentation (asserted in tests/test_golden_chain.py
+and tests/test_multichain.py).
+"""
+from __future__ import annotations
+
+import time as _time
+
+
+def perf_counter() -> float:
+    """Monotonic high-resolution timer for durations (seconds)."""
+    return _time.perf_counter()
+
+
+def monotonic() -> float:
+    """Monotonic timer for request timestamps (seconds)."""
+    return _time.monotonic()

@@ -1,0 +1,25 @@
+# repro-lint: treat-as=launch/bench_loop.py
+"""Seeded violations: ad-hoc wall-clock timing outside repro/obs.
+
+``time.sleep`` is pacing, not a clock READ, and must NOT be flagged;
+neither must the sanctioned ``obs.clock`` calls.
+"""
+import time
+from time import perf_counter
+from time import monotonic as mono
+
+from repro.obs import clock
+
+
+def drive(requests):
+    t0 = time.perf_counter()  # expect: timing-outside-obs
+    lat = []
+    for r in requests:
+        start = mono()  # expect: timing-outside-obs
+        r()
+        lat.append(perf_counter() - start)  # expect: timing-outside-obs
+        time.sleep(0.001)
+    wall = time.perf_counter() - t0  # expect: timing-outside-obs
+    ok = clock.perf_counter()
+    allowed = time.perf_counter()  # repro-lint: disable=timing-outside-obs
+    return lat, wall, ok, allowed

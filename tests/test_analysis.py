@@ -315,6 +315,46 @@ def test_cli_contract_audit_catches_tampered_json(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# observability schema audit (PR 10)
+# ---------------------------------------------------------------------------
+
+OBS_SAMPLES = REPO_ROOT / "results" / "obs"
+
+
+def test_committed_obs_samples_pass_schema_audit():
+    """Every committed results/obs sample is a well-formed repro.obs
+    export (audited in-process; CI also runs the CLI equivalent)."""
+    from repro.analysis.obsschema import obs_schema_findings
+    jsons = sorted(OBS_SAMPLES.glob("*.json"))
+    assert len(jsons) >= 3, "expected trace + metrics + serve samples"
+    for j in jsons:
+        assert obs_schema_findings(j) == [], j.name
+
+
+@pytest.mark.slow
+def test_cli_obs_audit_catches_tampered_samples(tmp_path):
+    """--obs on doctored samples (sweep span missing bytes_on_wire;
+    histogram total drifted off sum(counts); serve snapshot missing a
+    required histogram) exits nonzero naming each defect."""
+    trace = json.loads((OBS_SAMPLES / "train_trace.json").read_text())
+    for ev in trace["traceEvents"]:
+        if ev["name"] == "sweep":
+            ev["args"].pop("bytes_on_wire", None)
+    (tmp_path / "train_trace.json").write_text(json.dumps(trace))
+
+    met = json.loads((OBS_SAMPLES / "serve_metrics.json").read_text())
+    met["histograms"]["serve.execute_s"]["total"] += 1
+    del met["histograms"]["serve.queue_wait_s"]
+    (tmp_path / "serve_metrics.json").write_text(json.dumps(met))
+
+    out = _run_cli("--obs", str(tmp_path))
+    assert out.returncode == 1, out.stdout + out.stderr
+    assert "bytes_on_wire" in out.stdout
+    assert "sum(counts)" in out.stdout
+    assert "serve.queue_wait_s" in out.stdout
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernel contract verifier (PR 8)
 # ---------------------------------------------------------------------------
 

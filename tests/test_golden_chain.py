@@ -272,6 +272,45 @@ def test_golden_chain_ring_pipeline_no_fork():
     assert "OK" in out.stdout
 
 
+def test_recorder_does_not_fork_golden_chain(tmp_path):
+    """Bitwise non-interference (the ``repro.obs`` contract): a
+    ``TrainSession`` run with an ENABLED recorder replays the
+    recorder-off run EXACTLY — every trace value and every state
+    leaf — because timestamps are taken outside jitted code and
+    never feed back into sampling.  ``chains=1`` is pinned so the
+    CI ``REPRO_CHAINS=4`` leg exercises the same baseline."""
+    import jax
+
+    from repro.core import TrainSession
+    from repro.obs import Recorder
+
+    mat, _, _ = random_sparse(SEED, (48, 32), 0.3, rank=3)
+
+    def run(recorder):
+        s = TrainSession(num_latent=4, burnin=2, nsamples=3,
+                         seed=SEED, chains=1, recorder=recorder)
+        s.add_train_and_test(mat, noise=AdaptiveGaussian())
+        return s.run()
+
+    off = run(Recorder(enabled=False))
+    rec = Recorder(enabled=True)
+    on = run(rec)
+
+    assert on.rmse_train_trace == off.rmse_train_trace
+    assert on.rmse_test_trace == off.rmse_test_trace
+    assert on.rmse_test == off.rmse_test
+    for x, y in zip(jax.tree.leaves(on.state),
+                    jax.tree.leaves(off.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # the enabled run actually recorded: compile split + sweep spans
+    names = {e["name"] for e in rec.trace()["traceEvents"]}
+    assert {"session/compile", "sweep"} <= names
+    assert rec.counter("session.sweeps") == 5.0
+    # and the split is visible in the result
+    assert on.compile_s > 0.0
+    assert off.compile_s > 0.0
+
+
 if __name__ == "__main__":
     import sys
     if "--regen" not in sys.argv:

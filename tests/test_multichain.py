@@ -138,6 +138,63 @@ def test_session_chain_zero_is_the_single_chain_run():
     assert r1.n_chains == 1 and r1.chain_blocks is None
 
 
+def test_recorder_noninterference_multichain_bitwise(tmp_path):
+    """The ``repro.obs`` contract at ``chains=3`` with streaming
+    checkpoints: recorder-on and recorder-off runs are bitwise
+    identical — train traces, every stacked-state leaf, diagnostics,
+    and the bytes of every checkpointed sample file.  The recorder
+    threads through the session INTO the CheckpointManager savers,
+    so this also pins that ckpt instrumentation is report-only."""
+    from repro.obs import Recorder
+
+    train, test = _bmf_data(2)
+
+    def run(recorder, sub):
+        s = TrainSession(num_latent=4, burnin=2, nsamples=3, seed=9,
+                         chains=3, save_freq=1,
+                         save_dir=str(tmp_path / sub),
+                         recorder=recorder)
+        s.add_train_and_test(train, test)
+        return s.run()
+
+    off = run(Recorder(enabled=False), "off")
+    rec = Recorder(enabled=True)
+    on = run(rec, "on")
+
+    assert on.rmse_train_trace == off.rmse_train_trace
+    assert on.rmse_test_trace == off.rmse_test_trace
+    assert _leaves_equal(on.state, off.state)
+    for c in range(3):
+        assert on.chain_blocks[c][0].rmse_train_trace == \
+            off.chain_blocks[c][0].rmse_train_trace
+    assert set(on.diagnostics.rhat) == set(off.diagnostics.rhat)
+    for k in on.diagnostics.rhat:   # nan-aware: few draws => nan rhat
+        np.testing.assert_array_equal(on.diagnostics.rhat[k],
+                                      off.diagnostics.rhat[k])
+        np.testing.assert_array_equal(on.diagnostics.ess[k],
+                                      off.diagnostics.ess[k])
+    # checkpointed sample stores identical array-for-array (zip
+    # timestamps inside npz differ by nature; every stored value must
+    # not — ckpt spans/counters never touch what gets written)
+    on_files = sorted(p.relative_to(tmp_path / "on")
+                      for p in (tmp_path / "on").rglob("*.npz"))
+    off_files = sorted(p.relative_to(tmp_path / "off")
+                       for p in (tmp_path / "off").rglob("*.npz"))
+    assert on_files and on_files == off_files
+    for rel in on_files:
+        with np.load(tmp_path / "on" / rel) as a, \
+                np.load(tmp_path / "off" / rel) as b:
+            assert sorted(a.files) == sorted(b.files)
+            for k in a.files:
+                np.testing.assert_array_equal(a[k], b[k])
+    # the enabled recorder saw both the session and the ckpt layer
+    m = rec.metrics()
+    assert m["counters"]["session.sweeps"] == 5.0
+    assert m["counters"]["ckpt.saves"] >= 1.0
+    assert "session.sweep_s" in m["histograms"]
+    assert "ckpt.save_s" in m["histograms"]
+
+
 def test_resolve_chains_env_and_validation(monkeypatch):
     monkeypatch.delenv("REPRO_CHAINS", raising=False)
     assert resolve_chains() == 1

@@ -1,0 +1,316 @@
+"""The ``repro.obs`` observability subsystem (PR 10).
+
+Three contract families:
+
+1. **Primitives** — fixed-bucket histograms (observe/percentile/
+   serialization round-trip), recorder span/counter/gauge semantics,
+   trace + metrics + Prometheus export formats.
+2. **Determinism** — a DISABLED recorder never reads the clock and
+   records nothing (the on/off bitwise-equality side lives in
+   tests/test_golden_chain.py and tests/test_multichain.py).
+3. **Wiring** — ``REPRO_OBS=1`` makes an ordinary ``TrainSession``
+   emit a loadable Chrome trace with contract-derived
+   ``bytes_on_wire`` on every sweep span; ``PredictSession`` exposes
+   cache hit/miss stats; the module-level spec cache is a bounded LRU.
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.obs import (Histogram, METRICS_FORMAT, TRACE_FORMAT,
+                       Recorder, integer_buckets, latency_buckets,
+                       obs_enabled, percentile_summary,
+                       prometheus_text, resolve_recorder,
+                       write_json_atomic)
+
+
+# ---------------------------------------------------------------------------
+# histogram primitives
+# ---------------------------------------------------------------------------
+
+def test_latency_buckets_geometric_and_bounded():
+    b = latency_buckets()
+    assert b[0] == pytest.approx(1e-4)
+    assert all(y > x for x, y in zip(b, b[1:]))
+    assert b[-1] >= 120.0
+    # geometric: constant ratio
+    ratios = [y / x for x, y in zip(b, b[1:])]
+    assert max(ratios) - min(ratios) < 1e-9
+
+
+def test_integer_buckets_count_exactly():
+    h = Histogram(integer_buckets(4))
+    for occ, times in ((1, 3), (2, 1), (4, 2)):
+        for _ in range(times):
+            h.observe(occ)
+    # exact counts: 0.5/1.5/2.5/3.5/4.5 edges isolate each integer
+    assert h.counts[1] == 3 and h.counts[2] == 1 and h.counts[4] == 2
+    assert h.total == 6
+    assert h.mean() == pytest.approx((1 * 3 + 2 + 4 * 2) / 6, rel=0.5)
+
+
+def test_histogram_percentile_interpolates():
+    h = Histogram([1.0, 2.0, 4.0, 8.0])
+    for v in (0.5, 1.5, 1.6, 3.0, 6.0):
+        h.observe(v)
+    assert 0.0 <= h.percentile(0.0) <= 1.0
+    assert 1.0 <= h.percentile(0.5) <= 4.0
+    assert h.percentile(0.5) == pytest.approx(1.75)  # interpolated
+    assert h.percentile(1.0) <= 8.0
+    with pytest.raises(ValueError):
+        h.percentile(1.5)
+
+
+def test_histogram_overflow_and_empty():
+    h = Histogram([1.0, 2.0])
+    assert math.isnan(h.percentile(0.5))    # empty
+    h.observe(100.0)                        # overflow bucket
+    assert h.counts[-1] == 1
+    assert h.percentile(0.99) == 2.0        # clamped to last bound
+    assert h.sum == pytest.approx(100.0)
+
+
+def test_histogram_dict_round_trip_and_validation():
+    h = Histogram(latency_buckets())
+    for v in (0.001, 0.01, 0.01, 5.0):
+        h.observe(v)
+    d = h.to_dict()
+    assert len(d["counts"]) == len(d["bounds"]) + 1
+    assert d["total"] == 4
+    h2 = Histogram.from_dict(d)
+    assert h2.counts == h.counts and h2.bounds == h.bounds
+    assert h2.percentile(0.5) == h.percentile(0.5)
+    bad = dict(d, counts=d["counts"][:-1])
+    with pytest.raises(ValueError):
+        Histogram.from_dict(bad)
+
+
+def test_percentile_summary_keys():
+    h = Histogram(latency_buckets())
+    h.observe(0.02)
+    s = percentile_summary(h)
+    assert set(s) == {"p50", "p99", "mean", "count"}
+    assert s["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# recorder semantics
+# ---------------------------------------------------------------------------
+
+def test_disabled_recorder_records_nothing_and_skips_clock():
+    rec = Recorder(enabled=False)
+    assert rec.now() == 0.0     # no clock read on the off path
+    with rec.span("x", cat="t"):
+        pass
+    rec.add("c")
+    rec.gauge("g", 1.0)
+    rec.observe("h", 0.5)
+    assert rec.trace()["traceEvents"] == []
+    m = rec.metrics()
+    assert m["counters"] == {} and m["gauges"] == {} \
+        and m["histograms"] == {}
+
+
+def test_recorder_span_counter_gauge_and_trace_shape():
+    rec = Recorder(enabled=True)
+    rec.set_kind("session")
+    with rec.span("phase/work", cat="test", step=3):
+        rec.instant("marker", cat="test")
+    rec.add("n", 2)
+    rec.add("n")
+    rec.gauge("depth", 4.0)
+    rec.observe("lat", 0.01)
+
+    tr = rec.trace()
+    assert tr["repro"] == {"format": TRACE_FORMAT, "kind": "session"}
+    by_name = {e["name"]: e for e in tr["traceEvents"]}
+    span = by_name["phase/work"]
+    assert span["ph"] == "X" and span["dur"] >= 0 \
+        and span["args"]["step"] == 3
+    assert by_name["marker"]["ph"] == "i"
+    # instant fired inside the span's window
+    assert span["ts"] <= by_name["marker"]["ts"] \
+        <= span["ts"] + span["dur"]
+
+    m = rec.metrics()
+    assert m["format"] == METRICS_FORMAT and m["kind"] == "session"
+    assert m["counters"]["n"] == 3.0
+    assert m["gauges"]["depth"] == 4.0
+    assert m["histograms"]["lat"]["total"] == 1
+
+    rec.reset()
+    assert rec.trace()["traceEvents"] == []
+    assert rec.metrics()["counters"] == {}
+
+
+def test_prometheus_text_exposition():
+    rec = Recorder(enabled=True)
+    rec.add("serve.completed", 5)
+    rec.gauge("ckpt.queue_depth", 1.0)
+    rec.observe("lat", 0.5, bounds=[1.0, 2.0])
+    text = rec.prometheus()
+    assert "repro_serve_completed 5" in text
+    assert "repro_ckpt_queue_depth 1" in text
+    assert 'repro_lat_bucket{le="1' in text
+    assert 'le="+Inf"' in text
+    assert "repro_lat_count 1" in text
+    # standalone renderer agrees (TYPE header then the sample line)
+    assert "\nrepro_a_b 1" in prometheus_text({"a.b": 1.0}, {}, {})
+
+
+def test_obs_enabled_and_resolve_recorder(monkeypatch):
+    monkeypatch.delenv("REPRO_OBS", raising=False)
+    assert not obs_enabled()
+    assert not resolve_recorder(None).enabled
+    monkeypatch.setenv("REPRO_OBS", "1")
+    assert obs_enabled()
+    assert resolve_recorder(None).enabled
+    # fresh per call — two runs never interleave traces
+    assert resolve_recorder(None) is not resolve_recorder(None)
+    mine = Recorder(enabled=False)
+    assert resolve_recorder(mine) is mine
+
+
+def test_write_json_atomic(tmp_path):
+    p = tmp_path / "sub" / "x.json"
+    write_json_atomic(p, {"a": 1})
+    assert json.loads(p.read_text()) == {"a": 1}
+    assert [f.name for f in (tmp_path / "sub").iterdir()] == ["x.json"]
+
+
+# ---------------------------------------------------------------------------
+# session wiring: REPRO_OBS=1 emits a loadable trace
+# ---------------------------------------------------------------------------
+
+def _toy_train(tmp_path, **kw):
+    from repro.core import TrainSession
+    from repro.core.sparse import random_sparse
+    mat, _, _ = random_sparse(3, (40, 24), 0.3, rank=3)
+    s = TrainSession(num_latent=4, burnin=2, nsamples=2, seed=3,
+                     chains=1, save_freq=1,
+                     save_dir=str(tmp_path / "store"), **kw)
+    s.add_train_and_test(mat)
+    return s.run()
+
+
+def test_repro_obs_env_emits_loadable_trace(tmp_path, monkeypatch):
+    """The acceptance path: REPRO_OBS=1 + REPRO_OBS_DIR, an ordinary
+    TrainSession run, and the exported Chrome trace carries sweep
+    spans with contract bytes_on_wire plus the compile split — and
+    both exports pass the CI schema audit."""
+    from repro.analysis.obsschema import obs_schema_findings
+
+    out = tmp_path / "obs_out"
+    monkeypatch.setenv("REPRO_OBS", "1")
+    monkeypatch.setenv("REPRO_OBS_DIR", str(out))
+    r = _toy_train(tmp_path)
+
+    trace_p = out / "train_trace.json"
+    metrics_p = out / "train_metrics.json"
+    assert trace_p.is_file() and metrics_p.is_file()
+    assert obs_schema_findings(trace_p) == []
+    assert obs_schema_findings(metrics_p) == []
+
+    doc = json.loads(trace_p.read_text())
+    assert doc["repro"]["kind"] == "session"
+    sweeps = [e for e in doc["traceEvents"] if e["name"] == "sweep"]
+    assert len(sweeps) == 4     # burnin 2 + nsamples 2
+    assert {e["args"]["phase"] for e in sweeps} == {"burnin", "sample"}
+    assert all(isinstance(e["args"]["bytes_on_wire"], int)
+               for e in sweeps)
+    assert sweeps[0]["args"]["stage"] == "first"
+    assert [e["args"]["sweep"] for e in sweeps] == [0, 1, 2, 3]
+    compiles = [e for e in doc["traceEvents"]
+                if e["name"] == "session/compile"]
+    assert len(compiles) == 1
+
+    met = json.loads(metrics_p.read_text())
+    assert met["counters"]["session.sweeps"] == 4.0
+    assert met["counters"]["ckpt.saves"] >= 1.0
+    assert "session.sweep_s" in met["histograms"]
+
+    # satellite 1: the runtime split is additive and JSON-visible
+    d = r.to_dict()
+    assert d["compile_s"] > 0.0
+    assert d["total_s"] == pytest.approx(d["compile_s"]
+                                         + d["runtime_s"])
+    json.dumps(d)   # serializable end to end
+
+
+def test_obs_off_session_exports_nothing(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_OBS", raising=False)
+    monkeypatch.delenv("REPRO_OBS_DIR", raising=False)
+    r = _toy_train(tmp_path)
+    assert not (tmp_path / "store" / "obs").exists()
+    # the compile/runtime split is measured regardless of obs
+    assert r.compile_s > 0.0 and r.runtime_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# predict/serve wiring: cache stats + bounded spec cache
+# ---------------------------------------------------------------------------
+
+def test_predict_cache_stats_and_serve_snapshot(tmp_path):
+    from repro.core import PredictSession
+    from repro.launch.serve import RecommendServer
+
+    _toy_train(tmp_path)
+    store = str(tmp_path / "store")
+    ps = PredictSession(store)
+    ps.warm_cache()     # miss
+    ps.warm_cache()     # hit
+    st = ps.cache_stats()
+    assert st["misses"] == 1 and st["hits"] == 1
+    assert st["over_budget"] == 0
+    assert st["resident"] is True
+    assert st["resident_bytes"] > 0
+    assert st["load_count"] >= 1
+    assert st["spec_cache"]["size"] <= st["spec_cache"]["max_size"]
+
+    # a store bigger than the budget refuses residency and counts it
+    tiny = PredictSession(store, cache_bytes=16)
+    assert tiny.warm_cache() is None
+    t = tiny.cache_stats()
+    assert t["over_budget"] == 1 and t["resident"] is False
+
+    srv = RecommendServer(ps, slots=2, k=3)
+    for u in range(4):
+        srv.submit(user=u)
+    srv.run()
+    snap = srv.metrics_snapshot()
+    assert snap["kind"] == "serve"
+    assert snap["counters"]["serve.completed"] == 4.0
+    for name in ("serve.queue_wait_s", "serve.execute_s",
+                 "serve.batch_occupancy"):
+        assert name in snap["histograms"], name
+    occ = Histogram.from_dict(snap["histograms"]
+                              ["serve.batch_occupancy"])
+    assert 1.0 <= occ.mean() <= 2.0     # slots=2 bound respected
+
+
+def test_spec_cache_is_a_bounded_lru(tmp_path, monkeypatch):
+    from repro.core import predict
+
+    monkeypatch.setattr(predict, "_SPEC_CACHE_MAX", 2)
+    predict._SPEC_CACHE.clear()
+    for k in ("hits", "misses", "evictions"):
+        predict._SPEC_CACHE_STATS[k] = 0
+
+    stores = []
+    for i in range(3):
+        d = tmp_path / f"s{i}"
+        _toy_train(tmp_path / f"t{i}")
+        os.rename(tmp_path / f"t{i}" / "store", d)
+        stores.append(str(d))
+
+    for s in stores:
+        predict.PredictSession(s)
+    assert len(predict._SPEC_CACHE) == 2        # bounded
+    st = predict.spec_cache_stats()
+    assert st["misses"] == 3 and st["evictions"] == 1
+    # LRU: oldest store evicted, newest two resident
+    predict.PredictSession(stores[2])
+    assert predict.spec_cache_stats()["hits"] >= 1
